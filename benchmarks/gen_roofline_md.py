@@ -1,0 +1,42 @@
+"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+PEAK = {"compute_s": "compute", "memory_s": "memory", "collective_s": "collective"}
+
+
+def main(mesh_filter: str | None = None) -> None:
+    rows = [json.load(open(f)) for f in sorted(glob.glob("results/dryrun/*.json"))]
+    order = {"pod": 0, "multipod": 1}
+    rows.sort(key=lambda r: (r["arch"], r["cell"], order.get(r["mesh"], 2)))
+    print("| arch | cell | mesh | GiB/dev | compute_s | memory_s | coll_s "
+          "| dominant | frac@dom | MODEL/HLO |")
+    print("|---|---|---|---:|---:|---:|---:|---|---:|---:|")
+    for r in rows:
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['cell']} | {r['mesh']} | — | — | — | — "
+                  f"| *skip: sub-quadratic attn required* | — | — |")
+            continue
+        t = r["roofline"]
+        tot = sum(t.values())
+        dom = t[r["dominant"]]
+        # roofline fraction: time the dominant term would take alone over the
+        # sum (overlap-free pessimistic bound); 1.0 = perfectly balanced on
+        # the bottleneck.
+        frac = dom / tot if tot else 0.0
+        ur = r.get("useful_flops_ratio")
+        urs = f"{ur:.2f}" if ur is not None else "—"
+        print(f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+              f"| {r['bytes_per_device']/2**30:.2f} "
+              f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+              f"| {t['collective_s']:.2e} | {PEAK[r['dominant']]} "
+              f"| {frac:.2f} | {urs} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

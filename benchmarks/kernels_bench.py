@@ -1,0 +1,49 @@
+"""Engine micro-benchmarks: boolean-product engines on one sweep operator.
+
+CPU numbers are indicative only (the Pallas kernel runs in interpret mode);
+the architectural comparison that matters on TPU is captured by the roofline
+analysis.  Reported anyway so `benchmarks.run` exercises every engine.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.kernels.bitmm import ops as bitmm_ops
+from repro.kernels.bitmm import ref as bitmm_ref
+
+
+def bitmm_micro(n: int = 2048, v: int = 8, density: float = 0.01,
+                repeats: int = 5) -> list[dict]:
+    rng = np.random.default_rng(0)
+    a = rng.random((n, n)) < density
+    x = rng.random((v, n)) < 0.5
+    ap = jnp.asarray(bitops.pack(jnp.asarray(a)))
+    xj = jnp.asarray(x)
+    af = jnp.asarray(a, jnp.float32)
+
+    def t(fn):
+        fn()  # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_ref = t(jax.jit(lambda: bitmm_ref.bitmm_ref(xj, ap, n)))
+    t_mxu = t(jax.jit(lambda: (xj.astype(jnp.float32) @ af) > 0))
+    t_pallas = t(lambda: bitmm_ops.bitmm(xj, ap, interpret=True))
+    bytes_packed = n * n / 8
+    bytes_f32 = n * n * 4
+    return [dict(
+        bench="bitmm", n=n, v=v, density=density,
+        t_ref_unpack_matmul=t_ref, t_dense_f32_matmul=t_mxu,
+        t_pallas_interpret=t_pallas,
+        hbm_bytes_packed=bytes_packed, hbm_bytes_f32=bytes_f32,
+        packed_traffic_ratio=bytes_f32 / bytes_packed,
+    )]

@@ -1,0 +1,43 @@
+"""Roofline table assembly: reads results/dryrun/*.json produced by
+launch/dryrun.py and emits the per-(arch x cell x mesh) roofline terms
+(EXPERIMENTS.md §Roofline is generated from this)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load() -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(mesh: str = "pod") -> list[dict]:
+    out = []
+    for r in load():
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            out.append(dict(arch=r["arch"], cell=r["cell"], mesh=mesh,
+                            skipped=r["skipped"]))
+            continue
+        if not r.get("ok"):
+            out.append(dict(arch=r["arch"], cell=r["cell"], mesh=mesh,
+                            error=r.get("error")))
+            continue
+        t = r["roofline"]
+        out.append(dict(
+            arch=r["arch"], cell=r["cell"], mesh=mesh,
+            gib_per_dev=round(r["bytes_per_device"] / 2**30, 2),
+            compute_s=t["compute_s"], memory_s=t["memory_s"],
+            collective_s=t["collective_s"], dominant=r["dominant"],
+            model_flops=r["model_flops"], hlo_flops=r["hlo_flops"],
+            useful_ratio=r["useful_flops_ratio"],
+        ))
+    return out

@@ -1,0 +1,179 @@
+"""Paper-table benchmark implementations (Tables 2-5 + Sect. 5.3 analysis).
+
+Each function returns a list of row dicts and is invoked by benchmarks.run.
+Databases are scaled-down synthetics (CPU container); the comparisons are
+the paper's own: SOI engines vs Ma et al. (Table 2), pruning effectiveness
+(Table 3), downstream join evaluation full-vs-pruned under two join-order
+policies (Tables 4/5), and the sweep-count analysis (Sect. 5.3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dualsim, join, pruning, soi, sparql
+from repro.core.graph import Graph, subgraph_triples
+from repro.core.ma_baseline import dual_simulation_ma
+from repro.core.hhk import dual_simulation_hhk
+from . import workloads
+
+
+def _best_of(fn, n=3):
+    best = float("inf")
+    out = None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _pattern_of(query, g):
+    """Union-free BGP-ish pattern graph for the Ma/HHK baselines (they take
+    graphs, not queries — the paper strips OPTIONAL for Table 2 likewise)."""
+    parts = sparql.union_split(query)
+    triples = []
+    var_ids: dict[str, int] = {}
+    for part in parts[:1]:
+        s = soi.build_soi(part)
+        for v, a, w in s.pattern_edges:
+            la = (
+                g.label_names.index(a)
+                if isinstance(a, str) and a in g.label_names
+                else (a if isinstance(a, int) else 0)
+            )
+            triples.append((v, la, w))
+        n = s.n_vars
+    return Graph.from_arrays(n, g.n_labels, np.asarray(triples, np.int64))
+
+
+def table2_soi_vs_ma(repeats: int = 3) -> list[dict]:
+    """Runtime of the SOI engines vs Ma et al.'s algorithm (+HHK).
+
+    Matches the paper's setup: adjacency structures are resident (operand
+    construction excluded); timed portion = fixpoint solve only."""
+    import jax
+
+    dbs = workloads.databases()
+    rows = []
+    for name, dbk, q in workloads.queries():
+        g = dbs[dbk]
+        pat = _pattern_of(q, g)
+        c = soi.compile_soi(dualsim.pattern_graph_soi(pat), g)
+        ops_d = dualsim.make_dense_operands(c, g)
+        ops_s = dualsim.make_sparse_operands(c, g)
+        g._build_csr()  # Ma/HHK/worklist adjacency maps resident too
+
+        def run_dense():
+            return jax.block_until_ready(dualsim.solve_dense(ops_d))
+
+        def run_sparse():
+            return jax.block_until_ready(dualsim.solve_sparse(ops_s))
+
+        run_dense(), run_sparse()  # compile warmup
+        t_dense, (_, it_d) = _best_of(run_dense, repeats)
+        t_sparse, _ = _best_of(run_sparse, repeats)
+        t_wl, (_, evals) = _best_of(lambda: dualsim.solve_worklist(c, g), repeats)
+        t_ma, (s_ma, passes) = _best_of(lambda: dual_simulation_ma(pat, g), 1)
+        t_hhk, _ = _best_of(lambda: dual_simulation_hhk(pat, g), 1)
+        rows.append(dict(
+            query=name, db=dbk,
+            t_soi_dense=t_dense,
+            t_soi_sparse=t_sparse,
+            t_worklist=t_wl,
+            t_ma=t_ma, t_hhk=t_hhk,
+            sweeps=int(it_d), worklist_evals=int(evals), ma_passes=passes,
+            speedup_vs_ma=t_ma / max(t_sparse, 1e-9),
+        ))
+    return rows
+
+
+def table3_pruning() -> list[dict]:
+    """Result sizes, required triples, t_sim, triples after pruning."""
+    dbs = workloads.databases()
+    rows = []
+    for name, dbk, q in workloads.queries():
+        g = dbs[dbk]
+        t0 = time.perf_counter()
+        mask = np.zeros(g.n_edges, dtype=bool)
+        for part in sparql.union_split(q):
+            s = soi.build_soi(part)
+            c = soi.compile_soi(s, g)
+            chi, _ = dualsim.solve_worklist(c, g)  # compile-free SOI solve
+            m, _ = pruning.prune_triples(s, chi, g)
+            mask |= m
+        t_sim = time.perf_counter() - t0
+        matches = join.evaluate(q, g)
+        req = join.required_triples(q, g, matches)
+        rows.append(dict(
+            query=name, db=dbk, results=matches.n_rows, req_triples=req,
+            t_sparqlsim=t_sim, triples_after=int(mask.sum()),
+            db_triples=g.n_edges,
+            pruned_frac=1 - int(mask.sum()) / g.n_edges,
+        ))
+    return rows
+
+
+def _table_45(join_order: str) -> list[dict]:
+    dbs = workloads.databases()
+    rows = []
+    for name, dbk, q in workloads.queries():
+        g = dbs[dbk]
+        t0 = time.perf_counter()
+        mask = np.zeros(g.n_edges, dtype=bool)
+        for part in sparql.union_split(q):
+            s = soi.build_soi(part)
+            c = soi.compile_soi(s, g)
+            chi, _ = dualsim.solve_worklist(c, g)  # compile-free SOI solve
+            m, _ = pruning.prune_triples(s, chi, g)
+            mask |= m
+        t_sim = time.perf_counter() - t0
+        pruned = subgraph_triples(g, mask)
+        t_full, full = _best_of(lambda: join.evaluate(q, g, join_order=join_order))
+        t_pruned, pr = _best_of(
+            lambda: join.evaluate(q, pruned, join_order=join_order))
+        # soundness: no match lost.  Non-well-designed patterns may GAIN
+        # rows (pruned optional partners turn bound rows into unbound ones
+        # that cross-join more freely — paper Sect. 4.5); equality holds for
+        # well-designed queries (asserted in tests/test_system.py).
+        assert pr.n_rows >= full.n_rows, (name, full.n_rows, pr.n_rows)
+        rows.append(dict(
+            query=name, db=dbk, t_db=t_full, t_db_pruned=t_pruned,
+            t_pruned_plus_sim=t_pruned + t_sim, results=full.n_rows,
+        ))
+    return rows
+
+
+def table4_join_pruned_selectivity() -> list[dict]:
+    """RDFox-style (selectivity-ordered) downstream joins."""
+    return _table_45("selectivity")
+
+
+def table5_join_pruned_syntactic() -> list[dict]:
+    """Virtuoso-default-style (syntactic-order) downstream joins."""
+    return _table_45("syntactic")
+
+
+def iterations_analysis() -> list[dict]:
+    """Sect. 5.3: sweep counts, Jacobi batched vs sequential worklist, on the
+    cyclic low-selectivity queries where the paper observed >30 iterations."""
+    dbs = workloads.databases()
+    rows = []
+    for name, dbk, q in workloads.queries():
+        if not name.startswith(("L0", "L1", "L2")):
+            continue
+        g = dbs[dbk]
+        for part in sparql.union_split(q):
+            s = soi.build_soi(part)
+            c = soi.compile_soi(s, g)
+            _, sweeps = dualsim.solve_compiled(c, g, engine="dense")
+            _, evals_sparse = dualsim.solve_worklist(c, g, heuristic="sparse_first")
+            _, evals_fifo = dualsim.solve_worklist(c, g, heuristic="fifo")
+            rows.append(dict(
+                query=name, db=dbk, jacobi_sweeps=sweeps,
+                worklist_evals_sparse_first=evals_sparse,
+                worklist_evals_fifo=evals_fifo,
+                ineqs=len(c.ineq_lhs),
+            ))
+    return rows

@@ -1,0 +1,49 @@
+"""Shared benchmark workloads: scaled-down LUBM/DBpedia instances and the
+query set mirroring the paper's B/L/D families (Sect. 5.1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import sparql
+from repro.core.sparql import Optional_
+from repro.data import synth
+
+
+def databases():
+    return {
+        "lubm": synth.lubm_like(
+            n_universities=12, depts_per_uni=6, profs_per_dept=8,
+            students_per_dept=40, pubs_per_prof=4, seed=0,
+        ),
+        "dbpedia": synth.dbpedia_like(
+            n_nodes=4000, n_labels=40, n_edges=24_000, seed=0
+        ),
+    }
+
+
+def queries():
+    """(name, db_key, query) — cyclic/low-selectivity (L-family), chain and
+    star patterns (B-family), constants and OPTIONALs (D-family)."""
+    qs = []
+    qs.append(("L0_cyclic", "lubm", synth.lubm_l0_like()))
+    qs.append(("L1_pub2auth", "lubm", synth.lubm_l1_like()))
+    qs.append(("L2_advisor", "lubm", sparql.parse(
+        "{ ?s advisor ?p . ?s memberOf ?d . ?p worksFor ?d }")))
+    qs.append(("L3_opt", "lubm", synth.optional_query()))
+    qs.append(("L4_deep_star", "lubm", sparql.parse(
+        "{ ?p worksFor ?d . ?s advisor ?p . ?pub publicationAuthor ?p }")))
+    qs.append(("L5_const", "lubm", sparql.parse(
+        "{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }")))
+    for i in range(6):
+        a, b, c = f"p{i}", f"p{i+1}", f"p{i+2}"
+        qs.append((f"B{i}_chain", "dbpedia", sparql.parse(
+            f"{{ ?x {a} ?y . ?y {b} ?z }}")))
+        qs.append((f"B{i}_star", "dbpedia", sparql.parse(
+            f"{{ ?x {a} ?y . ?x {b} ?z . ?x {c} ?w }}")))
+    qs.append(("D0_opt", "dbpedia", sparql.parse(
+        "{ ?x p0 ?y } OPTIONAL { ?y p1 ?z }")))
+    qs.append(("D1_nwd", "dbpedia", sparql.parse(
+        "{ { ?a p0 ?b } OPTIONAL { ?c p1 ?b } } AND { ?c p2 ?d }")))
+    qs.append(("D2_union", "dbpedia", sparql.parse(
+        "{ ?x p0 ?y } UNION { ?x p1 ?y }")))
+    return qs

@@ -1,0 +1,50 @@
+"""End-to-end per-query database pruning on a LUBM-like instance — the
+paper's Sect. 5 application: dual simulation as a pruning preprocessor for a
+downstream join engine, with timings for full vs pruned evaluation.
+
+    PYTHONPATH=src python examples/pruning_pipeline.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import dualsim, join, pruning, soi, sparql
+from repro.core.graph import subgraph_triples
+from repro.data import synth
+
+db = synth.lubm_like(n_universities=10, depts_per_uni=5, profs_per_dept=6,
+                     students_per_dept=30, pubs_per_prof=3, seed=0)
+print(f"database: {db.n_edges} triples, {db.n_nodes} nodes, "
+      f"{db.n_labels} predicates")
+
+for qname, query in [("L1 (publication/2 authors)", synth.lubm_l1_like()),
+                     ("L0 (cyclic triangle)", synth.lubm_l0_like()),
+                     ("optional-heavy", synth.optional_query())]:
+    print(f"\n=== {qname} ===")
+    t0 = time.perf_counter()
+    mask = np.zeros(db.n_edges, dtype=bool)
+    sweeps = 0
+    for part in sparql.union_split(query):
+        s = soi.build_soi(part)
+        c = soi.compile_soi(s, db)
+        chi, it = dualsim.solve_compiled(c, db, engine="dense")
+        m, _ = pruning.prune_triples(s, chi, db)
+        mask |= m
+        sweeps = max(sweeps, int(it))
+    t_sim = time.perf_counter() - t0
+    pruned = subgraph_triples(db, mask)
+
+    t0 = time.perf_counter()
+    full = join.evaluate(query, db)
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pr = join.evaluate(query, pruned)
+    t_pruned = time.perf_counter() - t0
+    assert full.n_rows == pr.n_rows  # soundness: identical result sets
+
+    print(f"  dual simulation: {t_sim*1e3:8.1f} ms  ({sweeps} sweeps)")
+    print(f"  triples: {db.n_edges} -> {int(mask.sum())} "
+          f"({1 - mask.sum()/db.n_edges:.1%} pruned)")
+    print(f"  join on full DB:   {t_full*1e3:8.1f} ms  ({full.n_rows} results)")
+    print(f"  join on pruned DB: {t_pruned*1e3:8.1f} ms  "
+          f"(speedup {t_full/max(t_pruned,1e-9):.1f}x)")

@@ -1,0 +1,11 @@
+"""Batched dual-simulation query serving demo (see launch/serve.py).
+
+    PYTHONPATH=src python examples/serve_queries.py
+"""
+import subprocess
+import sys
+
+cmd = [sys.executable, "-m", "repro.launch.serve", "--batch", "4",
+       "--requests", "12", "--engine", "sparse"]
+print("+", " ".join(cmd))
+subprocess.run(cmd, check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

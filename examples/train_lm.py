@@ -1,0 +1,21 @@
+"""End-to-end LM training driver demo (reduced config, CPU-runnable):
+trains a reduced internlm2-family model for a few hundred steps with
+checkpointing, then simulates a node failure and restarts from the last
+committed checkpoint — the fault-tolerance path of launch/train.py.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+import tempfile
+
+with tempfile.TemporaryDirectory() as d:
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "internlm2-1.8b", "--reduced",
+        "--steps", "120", "--batch", "8", "--seq", "64",
+        "--ckpt-dir", d, "--ckpt-every", "40",
+        "--inject-failure-at", "90",
+    ]
+    print("+", " ".join(cmd))
+    subprocess.run(cmd, check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

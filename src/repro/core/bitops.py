@@ -1,0 +1,90 @@
+"""Bit-packing utilities for boolean node-set vectors.
+
+The paper (Sect. 3.2) stores node sets as bit-vectors and adjacency as bit
+matrices.  On TPU we keep dense ``uint32`` lanes (``N/32`` words per set) so
+the 8x128 VPU streams them; gap-length encoding from the paper does not map to
+fixed-width SIMD (see DESIGN.md Sect. 2).
+
+All functions are pure jnp and jit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+_BIT_DTYPE = jnp.uint32
+
+
+def packed_width(n: int) -> int:
+    """Number of uint32 words needed to hold ``n`` bits."""
+    return (n + WORD - 1) // WORD
+
+
+def pack(bits: jax.Array) -> jax.Array:
+    """Pack a boolean array along the last axis into uint32 words.
+
+    ``bits[..., n] -> packed[..., ceil(n/32)]``; bit ``i`` of word ``w`` holds
+    element ``32*w + i`` (little-endian within the word).
+    """
+    n = bits.shape[-1]
+    w = packed_width(n)
+    pad = w * WORD - n
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1
+        )
+    b = bits.astype(_BIT_DTYPE).reshape(bits.shape[:-1] + (w, WORD))
+    shifts = jnp.arange(WORD, dtype=_BIT_DTYPE)
+    return jnp.sum(b << shifts, axis=-1, dtype=_BIT_DTYPE)
+
+
+def unpack(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack`: ``packed[..., w] -> bool[..., n]``."""
+    shifts = jnp.arange(WORD, dtype=_BIT_DTYPE)
+    bits = (packed[..., None] >> shifts) & _BIT_DTYPE.dtype.type(1)
+    bits = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * WORD,))
+    return bits[..., :n].astype(jnp.bool_)
+
+
+def popcount(packed: jax.Array) -> jax.Array:
+    """Total number of set bits over the last axis (int32)."""
+    cnt = jax.lax.population_count(packed)
+    return jnp.sum(cnt.astype(jnp.int32), axis=-1)
+
+
+def any_set(packed: jax.Array) -> jax.Array:
+    """Whether any bit is set along the last axis."""
+    acc = jnp.zeros(packed.shape[:-1], dtype=_BIT_DTYPE)
+    acc = jnp.bitwise_or(acc, jax.lax.reduce(
+        packed, _BIT_DTYPE.dtype.type(0), jax.lax.bitwise_or, (packed.ndim - 1,)
+    ))
+    return acc != 0
+
+
+def band(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.bitwise_and(a, b)
+
+
+def bor(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.bitwise_or(a, b)
+
+
+def bnot(a: jax.Array) -> jax.Array:
+    return jnp.bitwise_not(a)
+
+
+def ones_mask(n: int) -> np.ndarray:
+    """Packed all-ones vector of logical length ``n`` (trailing bits zero)."""
+    w = packed_width(n)
+    out = np.full((w,), np.uint32(0xFFFFFFFF), dtype=np.uint32)
+    rem = n % WORD
+    if rem:
+        out[-1] = np.uint32((1 << rem) - 1)
+    return out
+
+
+def leq(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Bit-set inclusion a <= b (as sets), reduced over the last axis."""
+    return ~any_set(jnp.bitwise_and(a, jnp.bitwise_not(b)))

@@ -1,0 +1,598 @@
+"""Dual-simulation fixpoint engines (paper Sect. 3).
+
+Four engines compute the largest solution of a compiled SOI:
+
+* ``solve_dense``  — batched Jacobi sweep over dense boolean adjacency, one
+  matmul per (label, direction) operator per sweep.  This is the MXU path:
+  ``Y = chi @ A`` in ``dtype`` (bf16 on TPU) followed by ``> 0``.
+* ``solve_packed`` — same sweep over bit-packed ``uint32`` adjacency via the
+  Pallas ``bitmm`` kernel (64x less HBM traffic than bf16 dense).
+* ``solve_sparse`` — edge-list engine: the boolean product is a gather +
+  ``segment_max`` over edges, i.e. message passing in the OR-AND semiring.
+  The only engine that scales to DB-sized graphs; shards over a device mesh.
+* ``solve_worklist`` — the paper's own sequential strategy (Sect. 3.2 steps
+  1–2 with the Sect. 3.3 heuristics); numpy, used for Table-2 parity and
+  iteration-count studies.
+
+All batched engines implement the same monotone operator
+
+    chi[lhs] &= chi[rhs] ×b M        (edge inequalities, Eq. 11)
+    chi[lhs] &= chi[rhs]             (copy inequalities, Eq. 15)
+
+iterated to the (unique) greatest fixpoint; order of application does not
+change the fixpoint (Knaster–Tarski on the finite powerset lattice), which is
+exactly the degree of freedom the paper exploits — we spend it on batching
+instead of worklist heuristics (DESIGN.md Sect. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops
+from .graph import Graph
+from .soi import BWD, FWD, CompiledSOI, SOI, build_soi, compile_soi
+
+# --------------------------------------------------------------------- #
+# operand construction (numpy -> pytrees)
+# --------------------------------------------------------------------- #
+
+
+def _pad_table(groups: list[list[int]], pad: int) -> np.ndarray:
+    k = max((len(g) for g in groups), default=0)
+    k = max(k, 1)
+    out = np.full((len(groups), k), pad, dtype=np.int32)
+    for i, g in enumerate(groups):
+        out[i, : len(g)] = g
+    return out
+
+
+def _per_mat_tables(c: CompiledSOI) -> tuple[tuple, tuple]:
+    """Per-operator inequality tables.
+
+    For operator m: ``mat_rhs[m]`` lists the RHS variable of each inequality
+    using m; ``mat_table[m]`` is the per-variable padded index list into
+    those inequalities (pad = I_m, pointing at an appended all-ones row) so
+    multiple inequalities on the same LHS AND-combine with gathers only.
+    """
+    n_mats = len(c.mats)
+    rhs_by_mat: list[list[int]] = [[] for _ in range(n_mats)]
+    var_by_mat: list[list[list[int]]] = [
+        [[] for _ in range(c.n_vars)] for _ in range(n_mats)
+    ]
+    for l, r, m in zip(c.ineq_lhs, c.ineq_rhs, c.ineq_mat):
+        var_by_mat[m][l].append(len(rhs_by_mat[m]))
+        rhs_by_mat[m].append(r)
+    mat_rhs = tuple(jnp.asarray(r, jnp.int32) for r in rhs_by_mat)
+    mat_table = tuple(
+        jnp.asarray(_pad_table(v, pad=len(rhs_by_mat[m])), jnp.int32)
+        for m, v in enumerate(var_by_mat)
+    )
+    return mat_rhs, mat_table
+
+
+def _copy_tables(c: CompiledSOI) -> tuple[jax.Array, jax.Array]:
+    by_copy: list[list[int]] = [[] for _ in range(c.n_vars)]
+    for i, l in enumerate(c.copy_lhs):
+        by_copy[l].append(i)
+    return (
+        jnp.asarray(c.copy_rhs, jnp.int32),
+        jnp.asarray(_pad_table(by_copy, pad=len(c.copy_lhs)), jnp.int32),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Operands:
+    """Device operands shared by the batched engines.
+
+    Adjacency comes in an engine-specific layout: dense ``bool[M, n, n]``,
+    packed ``uint32[M, n, nw]``, or per-operator edge lists (sparse engine).
+    Exactly one layout is populated.
+    """
+
+    init: jax.Array  # bool [V, n]
+    mat_rhs: tuple  # per mat: int32 [I_m]
+    mat_table: tuple  # per mat: int32 [V, K_m] (padded with I_m)
+    copy_rhs: jax.Array  # int32 [C]
+    var_copy: jax.Array  # int32 [V, Kc]  (padded with C)
+    adj_dense: jax.Array | None = None  # bool [M, n, n]
+    adj_packed: jax.Array | None = None  # uint32 [M, n, nw]
+    edge_src: tuple | None = None  # per-mat int32 [E_m] source nodes
+    edge_dst: tuple | None = None  # per-mat int32 [E_m] destination nodes
+    # destination-partitioned layout (mode="partitioned"): block w only
+    # holds edges whose dst lies in chi block w; dst ids are block-local
+    # (pad rows use dst = n_local, dropped by the segment reduce).
+    edge_src_b: tuple | None = None  # per-mat int32 [W, Eb] global src
+    edge_dst_b: tuple | None = None  # per-mat int32 [W, Eb] local dst
+
+
+def _base_operands(c: CompiledSOI) -> dict:
+    mat_rhs, mat_table = _per_mat_tables(c)
+    copy_rhs, var_copy = _copy_tables(c)
+    return dict(
+        init=jnp.asarray(c.init),
+        mat_rhs=mat_rhs,
+        mat_table=mat_table,
+        copy_rhs=copy_rhs,
+        var_copy=var_copy,
+    )
+
+
+def make_dense_operands(c: CompiledSOI, g: Graph) -> Operands:
+    adj = np.stack(
+        [g.dense_adjacency(a, backward=(d == BWD)) for (a, d) in c.mats]
+    ) if c.mats else np.zeros((0, g.n_nodes, g.n_nodes), dtype=bool)
+    return Operands(adj_dense=jnp.asarray(adj), **_base_operands(c))
+
+
+def make_packed_operands(c: CompiledSOI, g: Graph) -> Operands:
+    adj = np.stack(
+        [g.packed_adjacency(a, backward=(d == BWD)) for (a, d) in c.mats]
+    ) if c.mats else np.zeros((0, g.n_nodes, bitops.packed_width(g.n_nodes)), np.uint32)
+    return Operands(adj_packed=jnp.asarray(adj), **_base_operands(c))
+
+
+def make_sparse_operands(c: CompiledSOI, g: Graph) -> Operands:
+    srcs, dsts = [], []
+    for a, d in c.mats:
+        e = g.edges_for_label(a)
+        s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
+        srcs.append(jnp.asarray(s, jnp.int32))
+        dsts.append(jnp.asarray(t, jnp.int32))
+    return Operands(
+        edge_src=tuple(srcs), edge_dst=tuple(dsts), **_base_operands(c)
+    )
+
+
+def make_partitioned_operands(
+    c: CompiledSOI, g: Graph, n_blocks: int
+) -> Operands:
+    """Destination-partitioned (vertex-cut) edge layout: the host-side graph
+    partitioner of the ``partitioned`` engine.  Requires n % n_blocks == 0
+    (pad the graph); blocks are padded to a common edge count."""
+    n = g.n_nodes
+    assert n % n_blocks == 0, "pad n_nodes to a multiple of n_blocks"
+    n_local = n // n_blocks
+    srcs_b, dsts_b = [], []
+    for a, d in c.mats:
+        e = g.edges_for_label(a)
+        s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
+        blk = t // n_local
+        order = np.argsort(blk, kind="stable")
+        s, t, blk = s[order], t[order], blk[order]
+        counts = np.bincount(blk, minlength=n_blocks)
+        eb = max(int(counts.max()), 1)
+        src_b = np.zeros((n_blocks, eb), np.int32)
+        dst_b = np.full((n_blocks, eb), n_local, np.int32)  # pad -> dropped
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        for w in range(n_blocks):
+            k = counts[w]
+            src_b[w, :k] = s[starts[w] : starts[w] + k]
+            dst_b[w, :k] = t[starts[w] : starts[w] + k] - w * n_local
+        srcs_b.append(jnp.asarray(src_b))
+        dsts_b.append(jnp.asarray(dst_b))
+    return Operands(
+        edge_src_b=tuple(srcs_b), edge_dst_b=tuple(dsts_b),
+        **_base_operands(c),
+    )
+
+
+# --------------------------------------------------------------------- #
+# batched sweep engines (per-operator Gauss–Seidel within a sweep)
+# --------------------------------------------------------------------- #
+
+
+def _wsc(x: jax.Array, spec) -> jax.Array:
+    """Optional sharding constraint (no-op when spec is None / no mesh)."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _apply_mat(chi: jax.Array, y: jax.Array, m: int, ops: Operands) -> jax.Array:
+    """chi[l] &= y[rhs_l] for every inequality of operator m (gather-only)."""
+    n = chi.shape[-1]
+    vals = y[ops.mat_rhs[m]]  # [I_m, n]
+    vals = jnp.concatenate([vals, jnp.ones((1, n), vals.dtype)])
+    per_var = jnp.all(vals[ops.mat_table[m]], axis=1)  # [V, n]
+    return jnp.logical_and(chi, per_var)
+
+
+def _apply_copies(chi: jax.Array, ops: Operands) -> jax.Array:
+    if ops.copy_rhs.shape[0] == 0:
+        return chi
+    n = chi.shape[-1]
+    cvals = chi[ops.copy_rhs]
+    cvals = jnp.concatenate([cvals, jnp.ones((1, n), cvals.dtype)])
+    per_var = jnp.all(cvals[ops.var_copy], axis=1)
+    return jnp.logical_and(chi, per_var)
+
+
+def _fixpoint(
+    propagate_m: Callable[[jax.Array, int], jax.Array],
+    ops: Operands,
+    max_sweeps: int | None,
+    chi_spec=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Iterate full sweeps until chi stops shrinking.
+
+    One sweep = for each (label, direction) operator m: one boolean product
+    ``y = chi x_b M_m`` (all variables batched) followed by the AND-updates
+    of m's inequalities — applied immediately (Gauss–Seidel within a sweep;
+    one y tensor live at a time).  Returns (chi, n_sweeps).
+    """
+    n_mats = len(ops.mat_rhs)
+
+    def sweep(chi: jax.Array) -> jax.Array:
+        for m in range(n_mats):
+            y = propagate_m(chi, m)  # [V, n] bool
+            chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
+        return _apply_copies(chi, ops)
+
+    def cond(state):
+        _, _, changed = state
+        return changed
+
+    def body(state):
+        chi, it, _ = state
+        new = sweep(chi)
+        changed = jnp.any(new != chi)
+        if max_sweeps is not None:
+            changed = jnp.logical_and(changed, it + 1 < max_sweeps)
+        return new, it + 1, changed
+
+    state = (_wsc(ops.init, chi_spec), jnp.int32(0), jnp.bool_(True))
+    chi, it, _ = jax.lax.while_loop(cond, body, state)
+    return chi, it
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "max_sweeps", "chi_spec"))
+def solve_dense(
+    ops: Operands, *, dtype=jnp.float32, max_sweeps: int | None = None,
+    chi_spec=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Sweeps with dense boolean matmuls on the MXU (OR-AND via (+,x), >0)."""
+
+    def propagate_m(chi: jax.Array, m: int) -> jax.Array:
+        x = chi.astype(dtype)
+        y = x @ ops.adj_dense[m].astype(dtype)
+        return y > 0
+
+    return _fixpoint(propagate_m, ops, max_sweeps, chi_spec)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_sweeps", "interpret", "chi_spec")
+)
+def solve_packed(
+    ops: Operands, *, max_sweeps: int | None = None, interpret: bool = True,
+    chi_spec=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Sweeps over bit-packed adjacency via the Pallas bitmm kernel."""
+    from repro.kernels.bitmm import ops as bitmm_ops
+
+    def propagate_m(chi: jax.Array, m: int) -> jax.Array:
+        return bitmm_ops.bitmm(chi, ops.adj_packed[m], interpret=interpret)
+
+    return _fixpoint(propagate_m, ops, max_sweeps, chi_spec)
+
+
+@functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec", "mode"))
+def solve_sparse(
+    ops: Operands, *, max_sweeps: int | None = None, chi_spec=None,
+    mode: str = "gs",
+) -> tuple[jax.Array, jax.Array]:
+    """Edge-list engine: gather + segment-max message passing (OR-AND).
+
+    One (gather, segment_max) pair per (label, direction) operator — the
+    GNN scatter regime; int32-safe at billion-edge scale because segments
+    are per-operator node ids.
+
+    ``mode``:
+    * ``"gs"`` (paper-faithful): operators applied sequentially within a
+      sweep — fewest sweeps, but every operator re-gathers the
+      freshly-updated chi (O(M) chi-sized collectives per sweep).
+    * ``"jacobi_packed"`` (beyond-paper, §Perf): all operators read ONE
+      bit-packed broadcast of chi per sweep — 32x fewer collective bytes
+      per gather and a single gather for all M operators, at the cost of
+      more sweeps (Jacobi vs Gauss–Seidel).  Same fixpoint either way
+      (monotone operator on a finite lattice).
+    """
+    n = ops.init.shape[-1]
+
+    def propagate_from(frontier: jax.Array, m: int) -> jax.Array:
+        msgs = frontier[:, ops.edge_src[m]].astype(jnp.int8)  # [V, E_m]
+        y = jax.ops.segment_max(msgs.T, ops.edge_dst[m], num_segments=n)
+        return jnp.maximum(y, 0).T > 0  # [V, n]
+
+    if mode == "gs":
+        return _fixpoint(propagate_from, ops, max_sweeps, chi_spec)
+
+    n_mats = len(ops.mat_rhs)
+
+    def sweep(chi: jax.Array) -> jax.Array:
+        # one bit-packed replicate of chi serves every operator this sweep
+        packed = bitops.pack(chi)  # [V, n/32] uint32
+        if chi_spec is not None:
+            packed = jax.lax.with_sharding_constraint(
+                packed, jax.sharding.PartitionSpec()
+            )
+        frontier = bitops.unpack(packed, n)  # replicated bool [V, n]
+        for m in range(n_mats):
+            y = propagate_from(frontier, m)
+            chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
+        return _apply_copies(chi, ops)
+
+    def cond(state):
+        return state[2]
+
+    def body(state):
+        chi, it, _ = state
+        new = sweep(chi)
+        changed = jnp.any(new != chi)
+        if max_sweeps is not None:
+            changed = jnp.logical_and(changed, it + 1 < max_sweeps)
+        return new, it + 1, changed
+
+    state = (_wsc(ops.init, chi_spec), jnp.int32(0), jnp.bool_(True))
+    chi, it, _ = jax.lax.while_loop(cond, body, state)
+    return chi, it
+
+
+@functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec"))
+def solve_partitioned(
+    ops: Operands, *, max_sweeps: int | None = None, chi_spec=None
+) -> tuple[jax.Array, jax.Array]:
+    """Vertex-cut partitioned engine (beyond-paper, EXPERIMENTS §Perf).
+
+    Edges are pre-partitioned by destination chi-block
+    (:func:`make_partitioned_operands`), so every segment reduction is
+    block-local; the ONLY cross-shard traffic per sweep is one bit-packed
+    broadcast of chi (n/8 bytes instead of M chi-sized all-gathers plus
+    scatter all-reduces).  Jacobi sweeps (all operators read the same
+    frontier); same fixpoint as the other engines.
+    """
+    v, n = ops.init.shape
+    w = ops.edge_src_b[0].shape[0]
+    n_local = n // w
+    n_mats = len(ops.mat_rhs)
+
+    def sweep(chi: jax.Array) -> jax.Array:
+        packed = bitops.pack(chi)  # [V, n/32]
+        if chi_spec is not None:
+            packed = jax.lax.with_sharding_constraint(
+                packed, jax.sharding.PartitionSpec()
+            )
+        frontier = bitops.unpack(packed, n)  # replicated [V, n]
+        for m in range(n_mats):
+            def block(src_w, dst_w):
+                msgs = frontier[:, src_w].astype(jnp.int8)  # [V, Eb]
+                yb = jax.ops.segment_max(
+                    msgs.T, dst_w, num_segments=n_local
+                )  # [n_local, V]; pad rows (dst=n_local) dropped
+                return jnp.maximum(yb, 0)
+
+            yw = jax.vmap(block)(ops.edge_src_b[m], ops.edge_dst_b[m])
+            y = yw.transpose(2, 0, 1).reshape(v, n) > 0  # [V, n], block-major
+            y = _wsc(y, chi_spec)
+            chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
+        return _apply_copies(chi, ops)
+
+    def cond(state):
+        return state[2]
+
+    def body(state):
+        chi, it, _ = state
+        new = sweep(chi)
+        changed = jnp.any(new != chi)
+        if max_sweeps is not None:
+            changed = jnp.logical_and(changed, it + 1 < max_sweeps)
+        return new, it + 1, changed
+
+    state = (_wsc(ops.init, chi_spec), jnp.int32(0), jnp.bool_(True))
+    chi, it, _ = jax.lax.while_loop(cond, body, state)
+    return chi, it
+
+
+# --------------------------------------------------------------------- #
+# the paper's sequential worklist engine (numpy reference)
+# --------------------------------------------------------------------- #
+def solve_worklist(
+    c: CompiledSOI,
+    g: Graph,
+    *,
+    heuristic: str = "sparse_first",
+    eq13_init: bool = True,
+) -> tuple[np.ndarray, int]:
+    """Paper Sect. 3.2 algorithm: pick an unstable inequality, validate or
+    update, destabilize dependents.  Heuristics from Sect. 3.3:
+
+    * ``sparse_first`` — static order preferring operators with more empty
+      columns (sparser matrices shrink the relation earlier);
+    * ``fifo`` — arrival order;
+    * row- vs column-wise evaluation of ``r`` chosen dynamically by comparing
+      ``|chi(rhs)|`` with ``|chi(lhs)|``.
+
+    Returns (chi, number of inequality evaluations).
+    """
+    n = g.n_nodes
+    chi = (
+        c.init.copy()
+        if eq13_init
+        else _eq12_init(c, g)
+    )
+    ineqs = list(zip(c.ineq_lhs, c.ineq_rhs, c.ineq_mat))
+    copies = list(zip(c.copy_lhs, c.copy_rhs))
+
+    # CSR per operator for row-wise evaluation.
+    csr: list[tuple[np.ndarray, np.ndarray]] = []
+    csc: list[tuple[np.ndarray, np.ndarray]] = []
+    nonempty_cols: list[int] = []
+    for a, d in c.mats:
+        e = g.edges_for_label(a)
+        s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
+        csr.append(_csr(s, t, n))
+        csc.append(_csr(t, s, n))
+        nonempty_cols.append(len(np.unique(t)))
+
+    if heuristic == "sparse_first":
+        order = sorted(range(len(ineqs)), key=lambda i: nonempty_cols[ineqs[i][2]])
+    else:
+        order = list(range(len(ineqs)))
+
+    # dependents: inequalities whose rhs is a given variable.
+    dep_edge: list[list[int]] = [[] for _ in range(c.n_vars)]
+    for i, (_, r, _) in enumerate(ineqs):
+        dep_edge[r].append(i)
+    dep_copy: list[list[int]] = [[] for _ in range(c.n_vars)]
+    for i, (_, r) in enumerate(copies):
+        dep_copy[r].append(i)
+
+    unstable = set(range(len(ineqs)))
+    unstable_c = set(range(len(copies)))
+    evaluations = 0
+    while unstable or unstable_c:
+        if unstable:
+            idx = next(i for i in order if i in unstable)
+            unstable.discard(idx)
+            l, r, m = ineqs[idx]
+            evaluations += 1
+            rr = _bit_product(chi[r], chi[l], csr[m], csc[m], n)
+            new = chi[l] & rr
+            if not np.array_equal(new, chi[l]):
+                chi[l] = new
+                # destabilize dependents (rhs == l); a self-loop inequality
+                # (l == r) legitimately re-enters the worklist here.
+                unstable.update(dep_edge[l])
+                unstable_c.update(dep_copy[l])
+        else:
+            idx = unstable_c.pop()
+            l, r = copies[idx]
+            evaluations += 1
+            new = chi[l] & chi[r]
+            if not np.array_equal(new, chi[l]):
+                chi[l] = new
+                unstable.update(dep_edge[l])
+                unstable_c.update(dep_copy[l])
+    return chi, evaluations
+
+
+def _eq12_init(c: CompiledSOI, g: Graph) -> np.ndarray:
+    init = np.ones((c.n_vars, g.n_nodes), dtype=bool)
+    for i, const in enumerate(c.soi.is_const):
+        if const is not None:
+            init[i] = c.init[i]
+    # labels absent from the DB still force emptiness
+    for i in range(c.n_vars):
+        if not c.init[i].any():
+            init[i] = False
+    return init
+
+
+def _csr(src: np.ndarray, dst: np.ndarray, n: int):
+    order = np.argsort(src, kind="stable")
+    s, t = src[order], dst[order]
+    ptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(ptr, s + 1, 1)
+    np.cumsum(ptr, out=ptr)
+    return ptr, t.astype(np.int32)
+
+
+def _bit_product(
+    x: np.ndarray, lhs: np.ndarray, csr, csc, n: int
+) -> np.ndarray:
+    """r = x ×b A, evaluated row- or column-wise per the paper's heuristic."""
+    if x.sum() <= lhs.sum():
+        # row-wise: union the A-rows of set bits of x.
+        ptr, idx = csr
+        out = np.zeros(n, dtype=bool)
+        for i in np.flatnonzero(x):
+            out[idx[ptr[i] : ptr[i + 1]]] = True
+        return out
+    # column-wise: only decide the columns where lhs is set.
+    ptr, idx = csc
+    out = np.zeros(n, dtype=bool)
+    for j in np.flatnonzero(lhs):
+        out[j] = x[idx[ptr[j] : ptr[j + 1]]].any()
+    return out
+
+
+# --------------------------------------------------------------------- #
+# high-level API
+# --------------------------------------------------------------------- #
+def pattern_graph_soi(pattern: Graph) -> SOI:
+    """SOI for classic graph-to-graph dual simulation (pattern = G1)."""
+    from .sparql import BGP, Triple, Var
+
+    trs = tuple(
+        Triple(Var(f"v{s}"), int(a), Var(f"v{o}"))
+        for (s, a, o) in pattern.triples
+    )
+    return build_soi(BGP(trs))
+
+
+def largest_dual_simulation(
+    pattern: Graph,
+    db: Graph,
+    *,
+    engine: str = "dense",
+    dtype=jnp.float32,
+) -> tuple[np.ndarray, int]:
+    """Largest dual simulation between ``pattern`` and ``db`` (Prop. 1).
+
+    Returns ``(S, sweeps)`` with ``S`` a bool matrix of shape
+    ``(pattern.n_nodes, db.n_nodes)``: ``S[v, x]`` iff x dual-simulates v.
+    """
+    soi = pattern_graph_soi(pattern)
+    # map var ids back to pattern node order: vars are created in triple
+    # order, so build the permutation explicitly.  Isolated pattern nodes
+    # (no incident edges) are unconstrained: simulated by every db node.
+    c = compile_soi(soi, db)
+    seen = {b: i for i, b in enumerate(soi.base)}
+    isolated = [n for n in range(pattern.n_nodes) if f"v{n}" not in seen]
+
+    def reorder(chi: np.ndarray) -> np.ndarray:
+        out = np.ones((pattern.n_nodes, db.n_nodes), dtype=bool)
+        for node in range(pattern.n_nodes):
+            if node not in isolated:
+                out[node] = chi[seen[f"v{node}"]]
+        return out
+
+    if engine == "dense":
+        ops = make_dense_operands(c, db)
+        chi, it = solve_dense(ops, dtype=dtype)
+    elif engine == "packed":
+        ops = make_packed_operands(c, db)
+        chi, it = solve_packed(ops)
+    elif engine == "sparse":
+        ops = make_sparse_operands(c, db)
+        chi, it = solve_sparse(ops)
+    elif engine == "worklist":
+        chi, it = solve_worklist(c, db)
+        return reorder(np.asarray(chi)), int(it)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return reorder(np.asarray(chi)), int(it)
+
+
+def solve_compiled(
+    c: CompiledSOI, g: Graph, *, engine: str = "dense", dtype=jnp.float32
+) -> tuple[np.ndarray, int]:
+    """Solve a compiled SOI with the chosen engine; returns (chi, iters)."""
+    if engine == "dense":
+        chi, it = solve_dense(make_dense_operands(c, g), dtype=dtype)
+    elif engine == "packed":
+        chi, it = solve_packed(make_packed_operands(c, g))
+    elif engine == "sparse":
+        chi, it = solve_sparse(make_sparse_operands(c, g))
+    elif engine == "worklist":
+        return solve_worklist(c, g)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return np.asarray(chi), int(it)

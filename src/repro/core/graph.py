@@ -1,0 +1,170 @@
+"""Edge-labeled directed graphs and graph databases (paper Sect. 2).
+
+A graph is ``G = (V, Sigma, E)`` with ``E ⊆ V × Sigma × V``.  Nodes and labels
+are dictionary-encoded to dense ints.  Three physical layouts coexist:
+
+* **triples** — ``(E, 3) int32`` array of (src, label, dst); canonical form.
+* **per-label CSR** — forward map F_a / backward map B_a (paper's adjacency
+  maps) as index arrays; used by the numpy reference engines and the join
+  evaluator.
+* **dense boolean / bit-packed adjacency** — per-label ``bool[n, n]`` or
+  ``uint32[n, n/32]`` matrices; used by the MXU / Pallas engines (viable up to
+  ~64k nodes per shard; the sparse edge-list engine covers DB scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from . import bitops
+
+
+@dataclasses.dataclass
+class Graph:
+    """An edge-labeled directed graph over dense int ids."""
+
+    n_nodes: int
+    n_labels: int
+    triples: np.ndarray  # (E, 3) int32: (src, label, dst)
+    node_names: list[str] | None = None
+    label_names: list[str] | None = None
+
+    # lazily built indexes
+    _fwd_csr: dict | None = dataclasses.field(default=None, repr=False)
+    _bwd_csr: dict | None = dataclasses.field(default=None, repr=False)
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def from_triples(
+        triples: Iterable[tuple[str, str, str]],
+    ) -> "Graph":
+        """Build from (subject, predicate, object) string triples."""
+        nodes: dict[str, int] = {}
+        labels: dict[str, int] = {}
+        enc = []
+        for s, p, o in triples:
+            si = nodes.setdefault(s, len(nodes))
+            pi = labels.setdefault(p, len(labels))
+            oi = nodes.setdefault(o, len(nodes))
+            enc.append((si, pi, oi))
+        arr = np.asarray(enc, dtype=np.int32).reshape(-1, 3)
+        return Graph(
+            n_nodes=len(nodes),
+            n_labels=len(labels),
+            triples=arr,
+            node_names=list(nodes),
+            label_names=list(labels),
+        )
+
+    @staticmethod
+    def from_arrays(n_nodes: int, n_labels: int, triples: np.ndarray) -> "Graph":
+        triples = np.asarray(triples, dtype=np.int32).reshape(-1, 3)
+        if len(triples):
+            assert triples[:, [0, 2]].max() < n_nodes, "node id out of range"
+            assert triples[:, 1].max() < n_labels, "label id out of range"
+        return Graph(n_nodes=n_nodes, n_labels=n_labels, triples=triples)
+
+    # ------------------------------------------------------------------ #
+    # id helpers
+    # ------------------------------------------------------------------ #
+    def node_id(self, name: str) -> int:
+        assert self.node_names is not None
+        return self.node_names.index(name)
+
+    def label_id(self, name: str) -> int:
+        assert self.label_names is not None
+        return self.label_names.index(name)
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.triples.shape[0])
+
+    # ------------------------------------------------------------------ #
+    # per-label edge lists (sparse engine / segment message passing)
+    # ------------------------------------------------------------------ #
+    def edges_for_label(self, a: int) -> np.ndarray:
+        """(Ea, 2) int32 (src, dst) rows with label ``a``."""
+        m = self.triples[:, 1] == a
+        return self.triples[m][:, [0, 2]]
+
+    def label_histogram(self) -> np.ndarray:
+        return np.bincount(self.triples[:, 1], minlength=self.n_labels)
+
+    # ------------------------------------------------------------------ #
+    # CSR adjacency maps (paper's F^a / B^a) — numpy reference engines
+    # ------------------------------------------------------------------ #
+    def fwd(self, a: int, v: int) -> np.ndarray:
+        """F^a(v): successor set of v via a-labeled edges."""
+        self._build_csr()
+        ptr, idx = self._fwd_csr[a]
+        return idx[ptr[v] : ptr[v + 1]]
+
+    def bwd(self, a: int, v: int) -> np.ndarray:
+        """B^a(v): predecessor set of v via a-labeled edges."""
+        self._build_csr()
+        ptr, idx = self._bwd_csr[a]
+        return idx[ptr[v] : ptr[v + 1]]
+
+    def _build_csr(self) -> None:
+        if self._fwd_csr is not None:
+            return
+        self._fwd_csr, self._bwd_csr = {}, {}
+        for a in range(self.n_labels):
+            e = self.edges_for_label(a)
+            self._fwd_csr[a] = _csr(e[:, 0], e[:, 1], self.n_nodes)
+            self._bwd_csr[a] = _csr(e[:, 1], e[:, 0], self.n_nodes)
+
+    # ------------------------------------------------------------------ #
+    # dense / packed adjacency (MXU + Pallas engines)
+    # ------------------------------------------------------------------ #
+    def dense_adjacency(self, a: int, backward: bool = False) -> np.ndarray:
+        """bool[n, n] forward (or backward) adjacency matrix for label a."""
+        e = self.edges_for_label(a)
+        m = np.zeros((self.n_nodes, self.n_nodes), dtype=bool)
+        if backward:
+            m[e[:, 1], e[:, 0]] = True
+        else:
+            m[e[:, 0], e[:, 1]] = True
+        return m
+
+    def packed_adjacency(self, a: int, backward: bool = False) -> np.ndarray:
+        """uint32[n, ceil(n/32)] bit-packed adjacency for label a."""
+        return np.asarray(bitops.pack(self.dense_adjacency(a, backward)))
+
+    def summary_fwd(self, a: int) -> np.ndarray:
+        """Paper's f^a: bool[n], bit i set iff node i has an outgoing a-edge."""
+        e = self.edges_for_label(a)
+        out = np.zeros(self.n_nodes, dtype=bool)
+        out[e[:, 0]] = True
+        return out
+
+    def summary_bwd(self, a: int) -> np.ndarray:
+        """Paper's b^a: bool[n], bit i set iff node i has an incoming a-edge."""
+        e = self.edges_for_label(a)
+        out = np.zeros(self.n_nodes, dtype=bool)
+        out[e[:, 1]] = True
+        return out
+
+
+def _csr(src: np.ndarray, dst: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    ptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(ptr, src + 1, 1)
+    np.cumsum(ptr, out=ptr)
+    return ptr, dst.astype(np.int32)
+
+
+def subgraph_triples(g: Graph, triple_mask: np.ndarray) -> Graph:
+    """Graph restricted to the triples selected by ``triple_mask``."""
+    return Graph(
+        n_nodes=g.n_nodes,
+        n_labels=g.n_labels,
+        triples=g.triples[triple_mask],
+        node_names=g.node_names,
+        label_names=g.label_names,
+    )

@@ -1,0 +1,42 @@
+"""N-Triples-style RDF reader/writer with dictionary encoding."""
+from __future__ import annotations
+
+import re
+from typing import Iterable, Iterator
+
+from repro.core.graph import Graph
+
+_LINE = re.compile(
+    r"^\s*(<[^>]+>|\S+)\s+(<[^>]+>|\S+)\s+(<[^>]+>|\"[^\"]*\"\S*|\S+)\s*\.?\s*$"
+)
+
+
+def _strip(term: str) -> str:
+    if term.startswith("<") and term.endswith(">"):
+        return term[1:-1]
+    return term
+
+
+def iter_triples(lines: Iterable[str]) -> Iterator[tuple[str, str, str]]:
+    for line in lines:
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _LINE.match(line)
+        if not m:
+            raise ValueError(f"bad triple line: {line[:80]!r}")
+        yield _strip(m.group(1)), _strip(m.group(2)), _strip(m.group(3))
+
+
+def load(path: str) -> Graph:
+    with open(path) as f:
+        return Graph.from_triples(iter_triples(f))
+
+
+def dump(g: Graph, path: str) -> None:
+    assert g.node_names is not None and g.label_names is not None
+    with open(path, "w") as f:
+        for s, p, o in g.triples:
+            f.write(
+                f"<{g.node_names[s]}> <{g.label_names[p]}> <{g.node_names[o]}> .\n"
+            )

@@ -1,0 +1,87 @@
+"""Logical-axis sharding context.
+
+Model code annotates tensors with *logical* axes (``batch``, ``vocab``,
+``expert``, ...); the launcher activates a mapping to physical mesh axes
+around tracing (``with logical_axis_rules(mesh): jit(...).lower(...)``).
+Outside the context every annotation is a no-op, so the same model code runs
+unsharded on CPU tests and fully sharded in the production dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_STATE = threading.local()
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "ff": ("model",),
+    "expert": ("model",),
+    "expert_cap": ("data",),
+    "moe_tokens": ("pod", "data", "model"),  # flat (token, k) dispatch dim
+    "embed_fsdp": ("data",),
+    "kv_seq": ("data",),
+    "nodes": ("data", "model"),
+    "edges": ("pod", "data", "model"),
+}
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, {**DEFAULT_RULES, **(rules or {})})
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def group_count(name: str, dim: int) -> int:
+    """Number of shard groups the logical axis ``name`` would split ``dim``
+    into under the active rules (1 outside a rule context).  Used by the MoE
+    layer to block its dispatch into shard-local groups."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape)
+    while axes:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size and dim % size == 0:
+            return size
+        axes = axes[1:]
+    return 1
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply with_sharding_constraint if a rule context is active.
+
+    ``logical`` has one entry per dim: a logical axis name or None.
+    Mesh axes that are absent or do not divide the dim are dropped.
+    """
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size and dim % size == 0:
+                break
+            axes = axes[1:]
+        spec.append(axes if axes else None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

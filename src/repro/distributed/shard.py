@@ -1,0 +1,222 @@
+"""Sharding rule tables: param/input PartitionSpecs per model family.
+
+Strategy (DESIGN.md Sect. 4):
+
+* LMs — FSDP over ``data`` (params' d_model-ish dim) x TP over ``model``
+  (heads / ffn columns / vocab); MoE experts over ``model`` when the expert
+  count divides (EP), else expert-internal d_ff over ``model`` (TP).
+  Batch over ``(pod, data)``.
+* GNNs — edge arrays fully sharded over ``(pod, data, model)``; node arrays
+  sharded over ``data`` (replicated over ``model``) so segment reductions
+  land locally after an all-gather of features.
+* RecSys — the embedding table row-sharded over every axis (it IS the
+  memory); dense trunk replicated, batch over ``(pod, data)``.
+
+Every spec passes through :func:`safe_spec`, which drops mesh axes that do
+not divide the dimension — so one rule table serves every (config x mesh)
+combination without divisibility crashes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def safe_spec(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop axes that don't divide their dimension (replicate instead)."""
+    out = []
+    for i, dim in enumerate(shape):
+        axes = spec[i] if i < len(spec) else None
+        if axes is None:
+            out.append(None)
+            continue
+        if dim % axis_size(mesh, axes) == 0 and dim > 0:
+            out.append(axes)
+        else:
+            # try a prefix of the axis tuple before giving up
+            if isinstance(axes, tuple):
+                kept = None
+                for j in range(len(axes) - 1, 0, -1):
+                    if dim % axis_size(mesh, axes[:j]) == 0:
+                        kept = axes[:j]
+                        break
+                out.append(kept)
+            else:
+                out.append(None)
+    return P(*out)
+
+
+def shard_by_rules(
+    tree: Any, mesh: Mesh, rules: list[tuple[str, P]]
+) -> Any:
+    """Tree of NamedShardings: first rule whose regex matches the param path."""
+
+    def one(path, leaf):
+        pstr = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        shape = np.shape(leaf)
+        for pat, spec in rules:
+            if re.search(pat, pstr):
+                return NamedSharding(mesh, safe_spec(shape, spec, mesh))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All batch-parallel axes present in the mesh (pod first)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Shard the batch dim over (pod, data) with divisibility fallback."""
+    axes = data_axes(mesh)
+    while axes and batch % axis_size(mesh, axes) != 0:
+        axes = axes[1:]
+    return P(axes if axes else None)
+
+
+def all_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+# --------------------------------------------------------------------- #
+# LM rules
+# --------------------------------------------------------------------- #
+def lm_param_rules(cfg, mesh: Mesh | None = None) -> list[tuple[str, P]]:
+    rules = [
+        # NB: anchored — "embed" must not shadow "unembed".
+        # unembed: keep d_model replicated so the CE contraction needs no
+        # full-vocab all-reduce; logits are born vocab-sharded
+        # (EXPERIMENTS §Perf, qwen3 train iteration 2).
+        (r"^unembed", P(None, "model")),
+        (r"^embed", P("model", "data")),
+        (r"ln_f|ln1|ln2|q_norm|k_norm", P()),
+        (r"attn/wq", P(None, "data", "model")),
+        (r"attn/wk|attn/wv", P(None, "data", None)),
+        (r"attn/wo", P(None, "model", "data")),
+        (r"mlp/w_gate|mlp/w_up", P(None, "data", "model")),
+        (r"mlp/w_down", P(None, "model", "data")),
+        (r"moe/router", P(None, "data", None)),
+    ]
+    if cfg.moe is not None:
+        model_size = mesh.shape["model"] if mesh is not None else 1
+        if model_size > 1 and cfg.moe.n_experts % model_size == 0:
+            # EP: experts across 'model'
+            rules += [
+                (r"moe/w_gate|moe/w_up", P(None, "model", "data", None)),
+                (r"moe/w_down", P(None, "model", None, "data")),
+            ]
+        else:
+            # TP fallback: expert-internal d_ff across 'model'
+            rules += [
+                (r"moe/w_gate|moe/w_up", P(None, None, "data", "model")),
+                (r"moe/w_down", P(None, None, "model", "data")),
+            ]
+    return rules
+
+
+def lm_input_specs(mesh: Mesh, batch: int) -> dict[str, P]:
+    bs = batch_spec(mesh, batch)
+    return {"tokens": bs, "labels": bs}
+
+
+def lm_cache_spec(mesh: Mesh, cfg, batch: int, seq: int) -> dict[str, P]:
+    """KV cache [L, B, S, kv, hd]: batch over (pod,data) when divisible,
+    else the cache sequence dim (flash-decoding-style split)."""
+    baxes = data_axes(mesh)
+    if batch % axis_size(mesh, baxes) == 0 and batch > 1:
+        # batch over (pod, data); cache sequence over 'model'
+        # (flash-decoding-style split of the KV read).
+        kv = P(None, baxes, "model", None, None)
+        pos = P(baxes)
+    else:
+        kv = P(None, None, ("data", "model"), None, None)
+        pos = P()
+    return {"k": kv, "v": kv, "pos": pos}
+
+
+# --------------------------------------------------------------------- #
+# GNN rules
+# --------------------------------------------------------------------- #
+def gnn_param_rules(cfg) -> list[tuple[str, P]]:
+    return [(r".*", P())]  # GNN trunks are tiny: replicate params
+
+
+def gnn_input_specs(mesh: Mesh) -> dict[str, P]:
+    eaxes = all_axes(mesh)
+    naxes = tuple(a for a in ("data", "model") if a in mesh.shape)
+    return {
+        "feat": P(naxes, None),
+        "edges": P(eaxes, None),
+        "edge_mask": P(eaxes),
+        "labels": P(naxes),
+        "node_graph": P(naxes),
+        "positions": P(naxes, None),
+    }
+
+
+# --------------------------------------------------------------------- #
+# RecSys rules
+# --------------------------------------------------------------------- #
+def recsys_param_rules(cfg) -> list[tuple[str, P]]:
+    return [
+        (r"table", P(("data", "model"), None)),
+        (r"mlp/\d+/w", P(None, "model")),
+        (r".*", P()),
+    ]
+
+
+def recsys_input_specs(mesh: Mesh, batch: int) -> dict[str, P]:
+    bs = batch_spec(mesh, batch)
+    return {
+        "dense": P(*bs, None),
+        "sparse": P(*bs, None),
+        "labels": bs,
+        "candidates": P(("data", "model"), None),
+    }
+
+
+# --------------------------------------------------------------------- #
+# dual-simulation (paper workload) rules
+# --------------------------------------------------------------------- #
+def dualsim_sparse_specs(mesh: Mesh) -> dict[str, P]:
+    """Sparse engine: edges fully sharded; chi columns over the non-pod
+    axes (the chi working set is the HBM hot spot at DB scale)."""
+    eaxes = all_axes(mesh)
+    chi_axes = tuple(a for a in ("data", "model") if a in mesh.shape)
+    return {
+        "init": P(None, chi_axes),
+        "edge_src": P(eaxes),
+        "edge_dst": P(eaxes),
+        "mat_rhs": P(),
+        "mat_table": P(),
+        "copy_rhs": P(),
+        "var_copy": P(),
+    }
+
+
+def dualsim_dense_specs(mesh: Mesh) -> dict[str, P]:
+    """Dense/MXU engine: adjacency 2-D sharded (rows x cols)."""
+    return {
+        "init": P(None, "model"),
+        "adj_dense": P(None, "data", "model"),
+        "adj_packed": P(None, "data", "model"),
+        "mat_rhs": P(),
+        "mat_table": P(),
+        "copy_rhs": P(),
+        "var_copy": P(),
+    }

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: bit-packed boolean vector-batch x matrix product.
+
+Computes ``out[q, jw] = OR_{i : x[q,i]=1} A[i, jw]`` over ``uint32`` words,
+i.e. the paper's ``×b`` with the adjacency matrix resident in HBM/VMEM at
+**1 bit per edge** (64x denser than bf16, 32x than int8).  The OR-AND
+semiring runs on the VPU: a masked select of packed rows followed by an
+OR-reduction over the contraction block.
+
+Tiling: grid = (J, I) with the contraction dimension I innermost so each
+``out`` tile is revisited sequentially and OR-accumulated in VMEM.
+
+    x block   (V,  BI)   at (0, i)      — the query-variable frontier bits
+    A block   (BI, BJW)  at (i, j)      — packed adjacency tile
+    out block (V,  BJW)  at (0, j)      — packed result tile (accumulated)
+
+VMEM per step = V*BI*4 + BI*BJW*4 + V*BJW*4 bytes plus the [V, BI, BJW]
+select intermediate in VREGs; defaults (V<=8, BI=256, BJW=128) stay well
+under the ~16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitmm_kernel(x_ref, a_ref, o_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [V, BI] uint32 (0/1 flags)
+    a = a_ref[...]  # [BI, BJW] uint32 packed words
+    # rows of A where the frontier bit is set, OR-reduced over the block.
+    masked = jnp.where(
+        (x != 0)[:, :, None], a[None, :, :], jnp.uint32(0)
+    )  # [V, BI, BJW]
+    acc = jax.lax.reduce(
+        masked, jnp.uint32(0), jax.lax.bitwise_or, (1,)
+    )  # [V, BJW]
+    o_ref[...] = jnp.bitwise_or(o_ref[...], acc)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_jw", "interpret")
+)
+def bitmm_packed(
+    x_flags: jax.Array,  # uint32 [V, n] 0/1 per node
+    a_packed: jax.Array,  # uint32 [n, nw]
+    *,
+    block_i: int = 256,
+    block_jw: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed boolean product; returns uint32 [V, nw]."""
+    v, n = x_flags.shape
+    n_a, nw = a_packed.shape
+    assert n == n_a, (x_flags.shape, a_packed.shape)
+
+    # pad every dimension to its block multiple (zeros are OR-identities)
+    vp = -(-v // 8) * 8
+    np_ = -(-n // block_i) * block_i
+    nwp = -(-nw // block_jw) * block_jw
+    x_p = jnp.zeros((vp, np_), jnp.uint32).at[:v, :n].set(x_flags)
+    a_p = jnp.zeros((np_, nwp), jnp.uint32).at[:n, :nw].set(a_packed)
+
+    grid = (nwp // block_jw, np_ // block_i)
+    out = pl.pallas_call(
+        _bitmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((vp, block_i), lambda j, i: (0, i)),
+            pl.BlockSpec((block_i, block_jw), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((vp, block_jw), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((vp, nwp), jnp.uint32),
+        interpret=interpret,
+    )(x_p, a_p)
+    return out[:v, :nw]

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the bitmm kernel.
+
+``bitmm`` is the drop-in boolean product used by
+:func:`repro.core.dualsim.solve_packed`: boolean frontier in, boolean rows
+out, packed adjacency in between.  On CPU we run the Pallas kernel in
+interpret mode; on TPU the same call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def bitmm(
+    x: jax.Array,  # bool [V, n]
+    a_packed: jax.Array,  # uint32 [n, nw]
+    *,
+    interpret: bool = False,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Returns bool [V, n_cols] where n_cols = n (square adjacency)."""
+    n = x.shape[-1]
+    if use_ref:
+        return _ref.bitmm_ref(x, a_packed, n)
+    flags = x.astype(jnp.uint32)
+    out_packed = _kernel.bitmm_packed(flags, a_packed, interpret=interpret)
+    return bitops.unpack(out_packed, n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmm_packed(
+    x_packed: jax.Array,  # uint32 [V, nw] packed frontier
+    a_packed: jax.Array,  # uint32 [n, nw]
+    n: int | None = None,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fully packed variant: packed frontier in, packed result out."""
+    nn = a_packed.shape[0]
+    flags = bitops.unpack(x_packed, nn).astype(jnp.uint32)
+    return _kernel.bitmm_packed(flags, a_packed, interpret=interpret)

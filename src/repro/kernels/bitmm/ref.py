@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the bit-packed boolean matrix product.
+
+``bitmm(x, A)[q, j] = OR_i ( x[q, i] AND A[i, j] )`` — the paper's ``×b``
+(footnote 2), with ``A`` stored bit-packed as ``uint32[n, ceil(n_cols/32)]``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitops
+
+
+def bitmm_ref(x, a_packed, n_cols: int):
+    """x: bool[V, n]; a_packed: uint32[n, nw]; returns bool[V, n_cols]."""
+    a = bitops.unpack(a_packed, n_cols)  # bool [n, n_cols]
+    y = jnp.einsum(
+        "vn,nk->vk",
+        x.astype(jnp.float32),
+        a.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return y > 0
+
+
+def bitmm_packed_ref(x, a_packed, n_cols: int):
+    """Same, but returns the packed uint32 result."""
+    return bitops.pack(bitmm_ref(x, a_packed, n_cols))

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: windowed segment-sum over sorted segment ids.
+
+The scatter hot spot of the GNN zoo and the sparse dual-simulation engine:
+``out[s] += sum_{i: seg[i]=s} vals[i]`` with ``seg`` sorted.  The TPU has no
+scatter unit, so the reduce is reformulated as a one-hot matmul per edge
+block — the MXU does the scatter (kernel_taxonomy §GNN, GE-SpMM style).
+
+Tiling: grid over edge blocks.  A host-precomputed, scalar-prefetched map
+``win[i]`` gives the segment-window block each edge block writes
+(``BlockSpec`` index map reads it), valid because sorted ids make windows
+monotone non-decreasing; the host layout guarantees each edge block touches
+at most one window (`prepare`: blocks are split at window boundaries).
+Revisited windows accumulate in VMEM; first visit initializes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def prepare(
+    vals: np.ndarray, seg_ids: np.ndarray, num_segments: int,
+    block_e: int = 256, block_n: int = 256,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Host-side layout: split/pad edge blocks so each touches ONE segment
+    window of ``block_n``.  Returns (vals_p, seg_p, win, n_pad).
+    Padding rows carry segment id = window_start (sums zeros — vals are 0).
+    """
+    e = len(seg_ids)
+    order = np.argsort(seg_ids, kind="stable")
+    seg_s, vals_s = seg_ids[order], vals[order]
+    blocks_v, blocks_s, win = [], [], []
+    i = 0
+    while i < e:
+        w = int(seg_s[i]) // block_n
+        j = i
+        while j < e and j - i < block_e and int(seg_s[j]) // block_n == w:
+            j += 1
+        bs = np.full(block_e, w * block_n, np.int32)
+        bv = np.zeros((block_e,) + vals.shape[1:], vals.dtype)
+        bs[: j - i] = seg_s[i:j]
+        bv[: j - i] = vals_s[i:j]
+        blocks_s.append(bs)
+        blocks_v.append(bv)
+        win.append(w)
+        i = j
+    n_pad = -(-num_segments // block_n) * block_n
+    n_win = n_pad // block_n
+    # every output window must be visited at least once (unvisited pallas
+    # output blocks are undefined): insert zero blocks for uncovered windows
+    covered = set(win)
+    merged_v, merged_s, merged_w = [], [], []
+    k = 0
+    for w in range(n_win):
+        if w in covered:
+            while k < len(win) and win[k] == w:
+                merged_v.append(blocks_v[k]); merged_s.append(blocks_s[k])
+                merged_w.append(w); k += 1
+        else:
+            merged_v.append(np.zeros((block_e,) + vals.shape[1:], vals.dtype))
+            merged_s.append(np.full(block_e, w * block_n, np.int32))
+            merged_w.append(w)
+    blocks_v, blocks_s, win = merged_v, merged_s, merged_w
+    return (
+        np.concatenate(blocks_v).reshape(len(win), block_e, *vals.shape[1:]),
+        np.stack(blocks_s),
+        np.asarray(win, np.int32),
+        n_pad,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_n", "interpret")
+)
+def segsum_blocks(
+    vals_b: jax.Array,  # [G, BE, D]
+    seg_b: jax.Array,  # [G, BE] absolute sorted ids
+    win: jax.Array,  # [G] window block per edge block
+    *,
+    num_segments: int,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    g, be, d = vals_b.shape
+    n_pad = -(-num_segments // block_n) * block_n
+    dp = -(-d // 128) * 128
+    vals_p = jnp.zeros((g, be, dp), vals_b.dtype).at[:, :, :d].set(vals_b)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda i, win: (i, 0)),
+            pl.BlockSpec((1, be, dp), lambda i, win: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, dp), lambda i, win: (win[i], 0)),
+    )
+
+    def kern(win_ref, seg_ref, val_ref, out_ref):
+        i = pl.program_id(0)
+
+        @pl.when((i == 0) | (win_ref[i] != win_ref[jnp.maximum(i - 1, 0)]))
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        base = win_ref[i] * block_n
+        local = seg_ref[0] - base  # [BE]
+        onehot = (
+            local[None, :] == jax.lax.iota(jnp.int32, block_n)[:, None]
+        ).astype(val_ref.dtype)
+        out_ref[...] += jnp.dot(
+            onehot, val_ref[0], preferred_element_type=out_ref.dtype
+        )
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, dp), vals_b.dtype),
+        interpret=interpret,
+    )(win, seg_b, vals_p)
+    return out[:num_segments, :d]

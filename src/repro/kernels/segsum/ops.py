@@ -1,0 +1,37 @@
+"""Public wrapper: host-side prepare + kernel call in one step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def segsum(
+    vals: np.ndarray,
+    seg_ids: np.ndarray,
+    num_segments: int,
+    *,
+    block_e: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+    use_ref: bool = False,
+):
+    """Segment sum over (unsorted OK) segment ids via the windowed kernel.
+
+    ``prepare`` sorts and blocks on the host (the data pipeline does this
+    once per graph); the device kernel is gather-free and scatter-free.
+    """
+    if use_ref:
+        order = np.argsort(seg_ids, kind="stable")
+        return _ref.segsum_ref(
+            jnp.asarray(vals[order]), jnp.asarray(seg_ids[order]), num_segments
+        )
+    vb, sb, win, _ = _kernel.prepare(
+        vals, seg_ids, num_segments, block_e=block_e, block_n=block_n
+    )
+    return _kernel.segsum_blocks(
+        jnp.asarray(vb), jnp.asarray(sb), jnp.asarray(win),
+        num_segments=num_segments, block_n=block_n, interpret=interpret,
+    )

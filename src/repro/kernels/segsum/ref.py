@@ -1,0 +1,12 @@
+"""Oracle for the tiled segment-sum kernel: ``jax.ops.segment_sum`` over
+sorted segment ids."""
+from __future__ import annotations
+
+import jax
+
+
+def segsum_ref(vals, seg_ids, num_segments: int):
+    """vals: [E, D]; seg_ids: [E] int32 sorted ascending; -> [N, D]."""
+    return jax.ops.segment_sum(
+        vals, seg_ids, num_segments=num_segments, indices_are_sorted=True
+    )

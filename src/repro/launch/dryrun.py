@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell with ShapeDtypeStruct inputs (no allocation), prove it fits
+(memory_analysis) and extract roofline terms (cost_analysis + HLO collective
+bytes).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --cell train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multipod
+Results are appended to results/dryrun/<arch>__<cell>__<mesh>.json and
+existing results are skipped unless --force.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.distributed.ctx import logical_axis_rules
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+# TPU v5e-like hardware constants (per task spec)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_COLL = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE = re.compile(r"(pred|u4|u8|u16|u32|u64|s4|s8|s16|s32|s64|bf16|f16|f32|f64|c64|c128)\[([0-9,]*)\]")
+
+_BYTES = {
+    "pred": 1, "u4": 0.5, "u8": 1, "u16": 2, "u32": 4, "u64": 8,
+    "s4": 0.5, "s8": 1, "s16": 2, "s32": 4, "s64": 8,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in the compiled HLO,
+    keyed by "<op>@<loop-depth>" where depth counts enclosing while bodies
+    (from the op_name metadata trace path)."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        shapes, op = m.group(1), m.group(2)
+        total = 0.0
+        for dt, dims in _SHAPE.findall(shapes):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            total += n * _BYTES[dt]
+        depth = line.count("/while/body")
+        key = f"{op}@{depth}"
+        out[key] = out.get(key, 0.0) + total
+    return out
+
+
+def weighted_collective_bytes(
+    coll: dict[str, float], trips: list[float]
+) -> float:
+    """Total collective bytes with per-loop-depth trip multipliers: an op at
+    depth d executes prod(trips[:d]) times (deeper than the known schedule
+    uses the full product)."""
+    total = 0.0
+    for key, b in coll.items():
+        depth = int(key.rsplit("@", 1)[1])
+        mult = 1.0
+        for t in trips[: min(depth, len(trips))]:
+            mult *= t
+        total += b * mult
+    return total
+
+
+def run_cell(spec, cell, mesh, mesh_name: str) -> dict:
+    state = spec.abstract_state(cell)
+    inputs = spec.abstract_inputs(cell)
+    state_sh = spec.state_shardings(mesh, cell)
+    input_sh = spec.input_shardings(mesh, cell)
+    step = spec.step(cell)
+    n_chips = mesh.devices.size
+
+    # train steps return (state, metrics): pin the state's output sharding
+    # to its input sharding (params/opt round-trip); let metrics replicate.
+    out_sh = None
+    if getattr(cell, "kind", None) == "train":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        out_sh = (state_sh, NamedSharding(mesh, P()))
+
+    t0 = time.time()
+    with mesh, logical_axis_rules(mesh):
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, input_sh),
+            **({"out_shardings": out_sh} if out_sh is not None else {}),
+        )
+        lowered = jitted.lower(state, inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # cost_analysis() runs on the SPMD-partitioned module, so flops/bytes
+    # are PER-DEVICE; while/scan bodies are counted once, so multiply by
+    # the spec's static trip factor (layer scan x microbatch scan x ...).
+    # Collectives are weighted by their actual loop depth: step-level
+    # all-reduces run once, layer-scan gathers run trips[0]*trips[1] times.
+    trip = float(getattr(spec, "hlo_trip_factor", lambda c: 1.0)(cell))
+    trips = getattr(spec, "trip_schedule", lambda c: [trip])(cell)
+    flops = float(cost.get("flops", 0.0)) * trip
+    bytes_acc = float(cost.get("bytes accessed", 0.0)) * trip
+    coll_total = weighted_collective_bytes(coll, trips)
+    per_chip = dict(flops=flops, bytes=bytes_acc, coll_bytes=coll_total)
+    terms = dict(
+        compute_s=per_chip["flops"] / PEAK_FLOPS,
+        memory_s=per_chip["bytes"] / HBM_BW,
+        collective_s=per_chip["coll_bytes"] / ICI_BW,
+    )
+    dominant = max(terms, key=terms.get)
+    model_flops = spec.model_flops(cell)
+    rec = dict(
+        arch=spec.id,
+        cell=cell.name,
+        mesh=mesh_name,
+        n_chips=int(n_chips),
+        ok=True,
+        t_lower_s=round(t_lower, 2),
+        t_compile_s=round(t_compile, 2),
+        bytes_per_device=int(getattr(mem, "temp_size_in_bytes", 0))
+        + int(getattr(mem, "argument_size_in_bytes", 0))
+        + int(getattr(mem, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+        out_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+        hlo_flops=flops,
+        hlo_bytes=bytes_acc,
+        collective_bytes=coll_total,
+        collectives=coll,
+        trip_factor=trip,
+        per_chip=per_chip,
+        roofline=terms,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / (flops * n_chips)) if flops else None,
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--cell", default=None, help="single cell name")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    arch_ids = [args.arch] if args.arch else configs.ARCH_IDS
+    meshes = {
+        "pod": (lambda: make_production_mesh(multi_pod=False)),
+        "multipod": (lambda: make_production_mesh(multi_pod=True)),
+    }
+    if args.mesh != "both":
+        meshes = {args.mesh: meshes[args.mesh]}
+
+    failures = 0
+    for arch_id in arch_ids:
+        spec = configs.get(arch_id)
+        for cell_name, cell in spec.cells().items():
+            if args.cell and cell_name != args.cell:
+                continue
+            reason = spec.skip_reason(cell_name)
+            for mesh_name, mk in meshes.items():
+                fn = os.path.join(
+                    args.out, f"{arch_id}__{cell_name}__{mesh_name}.json"
+                )
+                if os.path.exists(fn) and not args.force:
+                    print(f"[skip-cached] {arch_id} {cell_name} {mesh_name}")
+                    continue
+                if reason is not None:
+                    rec = dict(arch=arch_id, cell=cell_name, mesh=mesh_name,
+                               ok=True, skipped=reason)
+                    with open(fn, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[skip] {arch_id} {cell_name}: {reason}")
+                    continue
+                print(f"[run ] {arch_id} {cell_name} {mesh_name} ...", flush=True)
+                try:
+                    rec = run_cell(spec, cell, mk(), mesh_name)
+                    print(
+                        f"       ok: {rec['bytes_per_device']/2**30:.2f} GiB/dev, "
+                        f"compute {rec['roofline']['compute_s']:.3e}s "
+                        f"memory {rec['roofline']['memory_s']:.3e}s "
+                        f"coll {rec['roofline']['collective_s']:.3e}s "
+                        f"-> {rec['dominant']}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    rec = dict(arch=arch_id, cell=cell_name, mesh=mesh_name,
+                               ok=False, error=repr(e),
+                               traceback=traceback.format_exc()[-4000:])
+                    print(f"       FAIL: {e!r}", flush=True)
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

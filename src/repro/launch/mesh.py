@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.  The single-pod mesh is
+16x16 = 256 chips (data, model); the multi-pod mesh adds a leading pod axis:
+2 x 16 x 16 = 512 chips (pod, data, model) with the pod axis crossing DCI.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1x1 mesh over the real local device (smoke tests)."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))

@@ -1,0 +1,398 @@
+"""GNN zoo: GatedGCN, GAT, PNA, SchNet — segment-op message passing.
+
+JAX has no sparse SpMM beyond BCOO, so all message passing is implemented
+over explicit edge-index arrays with ``jax.ops.segment_sum`` / ``segment_max``
+(the scatter regime of kernel_taxonomy §GNN) — this IS the system, not a
+stub.  The same gather→reduce machinery implements the sparse dual-simulation
+engine in :mod:`repro.core.dualsim` (DESIGN.md Sect. 2).
+
+Graph batch format (all four shapes lower to it):
+
+* ``feat``      — [N, F] node features (or int atom types for molecules)
+* ``edges``     — [E, 2] int32 (src, dst)
+* ``edge_mask`` — [E] bool (padding for sampled subgraphs)
+* ``labels``    — [N] int (node tasks) or [G] float (graph regression)
+* ``node_graph``— [N] int32 graph id (batched small graphs), else zeros
+* ``positions`` — [N, 3] float (SchNet; synthesized for non-geometric cells,
+  see DESIGN.md §Arch-applicability)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str  # gatedgcn | gat | pna | schnet
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_out: int
+    n_heads: int = 1
+    task: str = "node_class"  # node_class | graph_reg
+    # schnet
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    remat: bool = True  # checkpoint each message-passing layer
+
+
+def _layer(cfg: GNNConfig, fn):
+    """Per-layer remat wrapper: edge-sized intermediates are recomputed in
+    the backward pass instead of stored (O(E·d) x n_layers -> O(E·d))."""
+    return jax.checkpoint(fn, prevent_cse=False) if cfg.remat else fn
+
+
+# --------------------------------------------------------------------- #
+# segment utilities
+# --------------------------------------------------------------------- #
+def seg_sum(vals, idx, n):
+    return jax.ops.segment_sum(vals, idx, num_segments=n)
+
+
+def seg_max(vals, idx, n):
+    out = jax.ops.segment_max(vals, idx, num_segments=n)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def seg_min(vals, idx, n):
+    out = jax.ops.segment_min(vals, idx, num_segments=n)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def seg_mean(vals, idx, n, deg=None):
+    s = seg_sum(vals, idx, n)
+    if deg is None:
+        deg = seg_sum(jnp.ones((vals.shape[0], 1), vals.dtype), idx, n)
+    return s / jnp.maximum(deg, 1.0)
+
+
+def seg_softmax(logits, idx, n):
+    """Softmax over segments (edge -> destination-node groups)."""
+    m = jax.ops.segment_max(logits, idx, num_segments=n)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(logits - m[idx])
+    z = seg_sum(e, idx, n)
+    return e / jnp.maximum(z[idx], 1e-30)
+
+
+def _dense(key, din, dout, pd):
+    w = jax.random.normal(key, (din, dout), pd) / math.sqrt(din)
+    return {"w": w, "b": jnp.zeros((dout,), pd)}
+
+
+def _apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _ln(x, eps=1e-5):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps)
+
+
+# --------------------------------------------------------------------- #
+# GatedGCN  (Bresson & Laurent; arXiv:2003.00982 benchmark config)
+# --------------------------------------------------------------------- #
+def _init_gatedgcn(cfg: GNNConfig, rng):
+    keys = jax.random.split(rng, cfg.n_layers * 5 + 3)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        k = keys[i * 5 : i * 5 + 5]
+        layers.append(
+            {
+                "A": _dense(k[0], d, d, cfg.param_dtype),
+                "B": _dense(k[1], d, d, cfg.param_dtype),
+                "C": _dense(k[2], d, d, cfg.param_dtype),
+                "D": _dense(k[3], d, d, cfg.param_dtype),
+                "E": _dense(k[4], d, d, cfg.param_dtype),
+            }
+        )
+    return {
+        "embed": _dense(keys[-3], cfg.d_in, d, cfg.param_dtype),
+        "edge_embed": jnp.zeros((1, d), cfg.param_dtype),
+        "layers": layers,
+        "head": _dense(keys[-1], d, cfg.n_out, cfg.param_dtype),
+    }
+
+
+def _fwd_gatedgcn(cfg: GNNConfig, p, batch):
+    n = batch["feat"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"][:, None].astype(cfg.dtype)
+    p = jax.tree.map(
+        lambda x: x.astype(cfg.dtype) if x.dtype == jnp.float32 else x, p
+    )
+    h = constrain(_apply(p["embed"], batch["feat"].astype(cfg.dtype)), "nodes", None)
+    e = constrain(
+        jnp.broadcast_to(p["edge_embed"], (src.shape[0], cfg.d_hidden)),
+        "edges", None,
+    )
+
+    def layer(lp, h, e):
+        dh = constrain(_apply(lp["D"], h)[src], "edges", None)
+        eh = constrain(_apply(lp["E"], h)[dst], "edges", None)
+        e_new = constrain(
+            e + jax.nn.relu(_ln(_apply(lp["C"], e) + dh + eh)), "edges", None
+        )
+        eta = constrain(jax.nn.sigmoid(e_new) * emask, "edges", None)
+        denom = constrain(seg_sum(eta, dst, n) + 1e-6, "nodes", None)
+        bh = constrain(_apply(lp["B"], h)[src], "edges", None)
+        msg = constrain(seg_sum(eta * bh, dst, n), "nodes", None) / denom
+        h = constrain(h + jax.nn.relu(_ln(_apply(lp["A"], h) + msg)), "nodes", None)
+        return h, e_new
+
+    step = _layer(cfg, layer)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *p["layers"])
+
+    def body(carry, lp):
+        h, e = step(lp, *carry)
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(body, (h, e), stacked)
+    return _readout(cfg, p, h, batch)
+
+
+# --------------------------------------------------------------------- #
+# GAT  (Velickovic et al.; Cora config: 2 layers, 8 heads x 8)
+# --------------------------------------------------------------------- #
+def _init_gat(cfg: GNNConfig, rng):
+    keys = jax.random.split(rng, cfg.n_layers * 3 + 1)
+    layers = []
+    din = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        dout = cfg.n_out if last else cfg.d_hidden
+        k = jax.random.split(keys[i], 3)
+        layers.append(
+            {
+                "W": jax.random.normal(k[0], (din, heads, dout), cfg.param_dtype)
+                / math.sqrt(din),
+                "a_src": jax.random.normal(k[1], (heads, dout), cfg.param_dtype)
+                / math.sqrt(dout),
+                "a_dst": jax.random.normal(k[2], (heads, dout), cfg.param_dtype)
+                / math.sqrt(dout),
+            }
+        )
+        din = heads * dout
+    return {"layers": layers}
+
+
+def _fwd_gat(cfg: GNNConfig, p, batch):
+    n = batch["feat"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"].astype(cfg.dtype)
+    h = constrain(batch["feat"].astype(cfg.dtype), "nodes", None)
+
+    def layer(lp, h, last):
+        hw = jnp.einsum("nf,fhd->nhd", h, lp["W"])  # [N, H, D]
+        al = jnp.einsum("nhd,hd->nh", hw, lp["a_src"])
+        ar = jnp.einsum("nhd,hd->nh", hw, lp["a_dst"])
+        logits = jax.nn.leaky_relu(
+            constrain(al[src], "edges", None) + constrain(ar[dst], "edges", None),
+            0.2,
+        )  # [E, H]
+        logits = constrain(
+            jnp.where(emask[:, None] > 0, logits, -1e30), "edges", None
+        )
+        alpha = constrain(
+            seg_softmax(logits, dst, n) * emask[:, None], "edges", None
+        )  # [E, H]
+        hws = constrain(hw[src], "edges", None, None)
+        out = constrain(
+            seg_sum(alpha[:, :, None] * hws, dst, n), "nodes", None, None
+        )  # [N, H, D]
+        if last:
+            return constrain(jnp.mean(out, axis=1), "nodes", None)
+        return constrain(jax.nn.elu(out).reshape(n, -1), "nodes", None)
+
+    for i, lp in enumerate(p["layers"]):
+        last = i == len(p["layers"]) - 1
+        h = _layer(cfg, functools.partial(layer, last=last))(lp, h)
+    return _readout(cfg, p, h, batch, head=False)
+
+
+# --------------------------------------------------------------------- #
+# PNA  (Corso et al.; mean/max/min/std x identity/amplification/attenuation)
+# --------------------------------------------------------------------- #
+def _init_pna(cfg: GNNConfig, rng):
+    keys = jax.random.split(rng, cfg.n_layers * 2 + 3)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[i], 2)
+        layers.append(
+            {
+                "pre": _dense(k[0], 2 * d, d, cfg.param_dtype),
+                "post": _dense(k[1], 13 * d, d, cfg.param_dtype),
+            }
+        )
+    return {
+        "embed": _dense(keys[-2], cfg.d_in, d, cfg.param_dtype),
+        "layers": layers,
+        "head": _dense(keys[-1], d, cfg.n_out, cfg.param_dtype),
+    }
+
+
+def _fwd_pna(cfg: GNNConfig, p, batch, delta: float = 2.5):
+    n = batch["feat"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"][:, None].astype(cfg.dtype)
+    h = constrain(_apply(p["embed"], batch["feat"].astype(cfg.dtype)), "nodes", None)
+    deg = seg_sum(emask, dst, n)  # [N, 1]
+    logd = jnp.log(deg + 1.0)
+
+    def layer(lp, h):
+        hs = constrain(h[src], "edges", None)
+        hd = constrain(h[dst], "edges", None)
+        msg = constrain(jax.nn.relu(
+            _apply(lp["pre"], jnp.concatenate([hs, hd], axis=-1))
+        ) * emask, "edges", None)  # [E, d]
+        mean = constrain(seg_mean(msg, dst, n, deg), "nodes", None)
+        mx = constrain(seg_max(msg, dst, n), "nodes", None)
+        mn = constrain(seg_min(msg, dst, n), "nodes", None)
+        var = constrain(seg_mean(msg * msg, dst, n, deg), "nodes", None) - mean * mean
+        std = jnp.sqrt(jnp.maximum(var, 1e-6))
+        aggs = jnp.concatenate([mean, mx, mn, std], axis=-1)  # [N, 4d]
+        amp = logd / delta
+        att = delta / jnp.maximum(logd, 1e-2)
+        scaled = constrain(
+            jnp.concatenate([aggs, aggs * amp, aggs * att, h], axis=-1),
+            "nodes", None,
+        )
+        return constrain(h + jax.nn.relu(_apply(lp["post"], scaled)), "nodes", None)
+
+    step = _layer(cfg, layer)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *p["layers"])
+    h, _ = jax.lax.scan(lambda hh, lp: (step(lp, hh), None), h, stacked)
+    return _readout(cfg, p, h, batch)
+
+
+# --------------------------------------------------------------------- #
+# SchNet  (Schütt et al.; continuous-filter conv, rbf=300, cutoff=10)
+# --------------------------------------------------------------------- #
+def _init_schnet(cfg: GNNConfig, rng):
+    keys = jax.random.split(rng, cfg.n_layers * 4 + 4)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[i], 4)
+        layers.append(
+            {
+                "filt1": _dense(k[0], cfg.n_rbf, d, cfg.param_dtype),
+                "filt2": _dense(k[1], d, d, cfg.param_dtype),
+                "lin1": _dense(k[2], d, d, cfg.param_dtype),
+                "lin2": _dense(k[3], d, d, cfg.param_dtype),
+            }
+        )
+    return {
+        "embed": jax.random.normal(keys[-3], (100, d), cfg.param_dtype) * 0.1,
+        "layers": layers,
+        "out1": _dense(keys[-2], d, d // 2, cfg.param_dtype),
+        "out2": _dense(keys[-1], d // 2, cfg.n_out, cfg.param_dtype),
+    }
+
+
+def _ssp(x):  # shifted softplus
+    return jax.nn.softplus(x) - math.log(2.0)
+
+
+def _fwd_schnet(cfg: GNNConfig, p, batch):
+    n = batch["feat"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"][:, None].astype(cfg.dtype)
+    z = batch["feat"]
+    if z.ndim == 2:  # dense features -> project to type logits
+        z = jnp.argmax(z[:, :100], axis=-1) if z.shape[1] >= 2 else z[:, 0].astype(jnp.int32)
+    h = p["embed"][jnp.clip(z, 0, 99)]  # [N, d]
+    pos = batch["positions"].astype(cfg.dtype)
+    dist = jnp.sqrt(
+        jnp.sum((pos[src] - pos[dst]) ** 2, axis=-1, keepdims=True) + 1e-12
+    )  # [E, 1]
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf, dtype=cfg.dtype)
+    gamma = 10.0
+    rbf = constrain(
+        jnp.exp(-gamma * (dist - centers[None, :]) ** 2), "edges", None
+    )  # [E, n_rbf]
+    cos_cut = 0.5 * (jnp.cos(jnp.pi * jnp.minimum(dist, cfg.cutoff) / cfg.cutoff) + 1.0)
+
+    def layer(lp, h):
+        w = constrain(
+            _ssp(_apply(lp["filt2"], _ssp(_apply(lp["filt1"], rbf)))) * cos_cut,
+            "edges", None,
+        )
+        hs = constrain(_apply(lp["lin1"], h)[src], "edges", None)
+        msg = constrain(hs * w * emask, "edges", None)
+        agg = constrain(seg_sum(msg, dst, n), "nodes", None)
+        return constrain(h + _apply(lp["lin2"], _ssp(agg)), "nodes", None)
+
+    step = _layer(cfg, layer)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *p["layers"])
+    h, _ = jax.lax.scan(lambda hh, lp: (step(lp, hh), None), h, stacked)
+    h = _apply(p["out1"], h)
+    h = _apply(p["out2"], _ssp(h))  # [N, n_out]
+    if cfg.task == "graph_reg":
+        g = batch["node_graph"]
+        ng = batch["n_graphs"]
+        return seg_sum(h, g, ng)  # per-molecule energy sum
+    return h
+
+
+# --------------------------------------------------------------------- #
+# shared readout / dispatch
+# --------------------------------------------------------------------- #
+def _readout(cfg: GNNConfig, p, h, batch, head: bool = True):
+    if head:
+        h = _apply(p["head"], h)
+    if cfg.task == "graph_reg":
+        g = batch["node_graph"]
+        ng = batch["n_graphs"]
+        cnt = seg_sum(jnp.ones((h.shape[0], 1), h.dtype), g, ng)
+        return seg_sum(h, g, ng) / jnp.maximum(cnt, 1.0)
+    return h
+
+
+_INIT = {
+    "gatedgcn": _init_gatedgcn,
+    "gat": _init_gat,
+    "pna": _init_pna,
+    "schnet": _init_schnet,
+}
+_FWD = {
+    "gatedgcn": _fwd_gatedgcn,
+    "gat": _fwd_gat,
+    "pna": _fwd_pna,
+    "schnet": _fwd_schnet,
+}
+
+
+def init_params(cfg: GNNConfig, rng: jax.Array) -> dict:
+    return _INIT[cfg.arch](cfg, rng)
+
+
+def forward(cfg: GNNConfig, params: dict, batch: dict) -> jax.Array:
+    return _FWD[cfg.arch](cfg, params, batch)
+
+
+def loss_fn(cfg: GNNConfig, params: dict, batch: dict) -> jax.Array:
+    out = forward(cfg, params, batch)
+    if cfg.task == "graph_reg":
+        tgt = batch["labels"].astype(jnp.float32)
+        return jnp.mean((out[..., 0].astype(jnp.float32) - tgt) ** 2)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,584 @@
+"""Decoder-only LM family: dense GQA transformers and MoE variants.
+
+Covers the five assigned LM architectures (internlm2-1.8b, qwen3-8b, yi-6b,
+olmoe-1b-7b, mixtral-8x7b): grouped-query attention, RoPE, optional QK-norm
+(qwen3), optional sliding-window attention (mixtral), SwiGLU FFN, and top-k
+token-choice MoE with capacity-based one-hot dispatch (GShard-style einsum
+formulation, EP/TP-shardable).
+
+Pure JAX: params are nested dicts, every op is jnp / lax; sharding is
+attached externally via :mod:`repro.distributed.shard` rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    moe: MoEConfig | None = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16  # activation dtype
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def full_attention(self) -> bool:
+        return self.sliding_window is None
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND model-FLOPs accounting)."""
+        d, h, kv, hd, f, v = (
+            self.d_model,
+            self.n_heads,
+            self.n_kv_heads,
+            self.head_dim,
+            self.d_ff,
+            self.vocab,
+        )
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.moe:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_expert + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters — MoE counts top_k experts only."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() - self.n_layers * (
+            self.moe.n_experts * 3 * d * self.moe.d_expert
+        )
+        return dense + self.n_layers * self.moe.top_k * 3 * d * self.moe.d_expert
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def init_params(cfg: LMConfig, rng: jax.Array) -> dict:
+    d, h, kv, hd, f, v = (
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.head_dim,
+        cfg.d_ff,
+        cfg.vocab,
+    )
+    pd = cfg.param_dtype
+    keys = jax.random.split(rng, cfg.n_layers + 2)
+
+    def dense(key, shape, fan_in):
+        return (jax.random.normal(key, shape, pd) / math.sqrt(fan_in)).astype(pd)
+
+    layers = []
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[li], 10)
+        layer = {
+            "attn": {
+                "wq": dense(k[0], (d, h * hd), d),
+                "wk": dense(k[1], (d, kv * hd), d),
+                "wv": dense(k[2], (d, kv * hd), d),
+                "wo": dense(k[3], (h * hd, d), h * hd),
+            },
+            "ln1": jnp.ones((d,), pd),
+            "ln2": jnp.ones((d,), pd),
+        }
+        if cfg.qk_norm:
+            layer["attn"]["q_norm"] = jnp.ones((hd,), pd)
+            layer["attn"]["k_norm"] = jnp.ones((hd,), pd)
+        if cfg.moe:
+            e, fe = cfg.moe.n_experts, cfg.moe.d_expert
+            layer["moe"] = {
+                "router": dense(k[4], (d, e), d),
+                "w_gate": dense(k[5], (e, d, fe), d),
+                "w_up": dense(k[6], (e, d, fe), d),
+                "w_down": dense(k[7], (e, fe, d), fe),
+            }
+        else:
+            layer["mlp"] = {
+                "w_gate": dense(k[4], (d, f), d),
+                "w_up": dense(k[5], (d, f), d),
+                "w_down": dense(k[6], (f, d), f),
+            }
+        layers.append(layer)
+    return {
+        "embed": dense(keys[-2], (v, d), d),
+        "unembed": dense(keys[-1], (d, v), d),
+        "ln_f": jnp.ones((d,), pd),
+        "layers": _stack_layers(layers),
+    }
+
+
+def _stack_layers(layers: list[dict]) -> dict:
+    """Stack per-layer pytrees along a leading axis (scan-friendly)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# --------------------------------------------------------------------- #
+# building blocks
+# --------------------------------------------------------------------- #
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _mask_bias(
+    q_pos: jax.Array, k_pos: jax.Array, window: int | None
+) -> jax.Array:
+    """[B, 1, 1, Sq, Sk] additive mask: causal (+ sliding window)."""
+    ok = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    return jnp.where(ok[:, None, None], 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa_block(q, k, v, bias, scale):
+    """GQA block attention.  q: [B, cq, KV, G, hd]; k/v: [B, ck, KV, hd];
+    bias: [B, 1, 1, cq, ck].  Returns (o [B,KV,G,cq,hd], m, l)."""
+    logits = (
+        jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+        * scale
+        + bias
+    )
+    # clamp the running max above the mask value so fully-masked rows get
+    # p = exp(-1e30 + 1e9) = 0 instead of exp(0) = 1.
+    m = jnp.maximum(jnp.max(logits, axis=-1), -1e9)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), v)
+    return o, m, l
+
+
+def gqa_attention(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Sk, KV, hd]
+    v: jax.Array,  # [B, Sk, KV, hd]
+    q_pos: jax.Array,  # [B, Sq]
+    k_pos: jax.Array,  # [B, Sk]
+    *,
+    window: int | None,
+    chunk_q: int = 1024,
+    chunk_k: int = 2048,
+) -> jax.Array:
+    """Flash-style chunked GQA attention (online softmax, O(S) memory).
+
+    Falls back to a single unchunked block for short sequences.  Never
+    materializes the repeated-KV tensor nor the full S x S logits.
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, g, hd)
+
+    if sq * sk <= chunk_q * chunk_k * 4:  # small: one block
+        bias = _mask_bias(q_pos, k_pos, window)
+        o, m, l = _sdpa_block(qg, k, v, bias, scale)
+        o = o / jnp.maximum(l, 1e-30)[..., None].astype(o.dtype)
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+    nq = -(-sq // chunk_q)
+    nk = -(-sk // chunk_k)
+    sq_p, sk_p = nq * chunk_q, nk * chunk_k
+    qg = jnp.pad(qg, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp_ = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    # padded k positions must never be attended: put them far in the future
+    kpos_p = jnp.pad(k_pos, ((0, 0), (0, sk_p - sk)), constant_values=2**30)
+    qpos_p = jnp.pad(q_pos, ((0, 0), (0, sq_p - sq)), constant_values=0)
+
+    q_ch = qg.reshape(b, nq, chunk_q, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp_ch = qpos_p.reshape(b, nq, chunk_q).transpose(1, 0, 2)
+    k_ch = kp_.reshape(b, nk, chunk_k, kvh, hd).transpose(1, 0, 2, 3, 4)
+    v_ch = vp_.reshape(b, nk, chunk_k, kvh, hd).transpose(1, 0, 2, 3, 4)
+    kp_ch = kpos_p.reshape(b, nk, chunk_k).transpose(1, 0, 2)
+
+    def per_q_chunk(carry, xs):
+        qc, qpc = xs  # [B, cq, KV, G, hd], [B, cq]
+
+        def per_k_chunk(state, ks):
+            m, l, acc = state
+            kc, vc, kpc = ks
+            bias = _mask_bias(qpc, kpc, window)
+            logits = (
+                jnp.einsum(
+                    "bqkgd,bskd->bkgqs", qc, kc,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+                + bias
+            )
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))  # m0 = -1e9 floor
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(qc.dtype), vc
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, chunk_q), -1e9, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, chunk_q, hd), qc.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            per_k_chunk, (m0, l0, a0), (k_ch, v_ch, kp_ch)
+        )
+        o = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return carry, o  # [B, KV, G, cq, hd]
+
+    _, o_ch = jax.lax.scan(per_q_chunk, (), (q_ch, qp_ch))  # [nq, B,KV,G,cq,hd]
+    o = o_ch.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * chunk_q, h, hd)
+    return o[:, :sq]
+
+
+def attention(
+    cfg: LMConfig,
+    p: dict,
+    x: jax.Array,  # [B, Sq, d]
+    positions: jax.Array,  # [B, Sq]
+    k_cache: jax.Array | None = None,  # [B, Sk, kv, hd]
+    v_cache: jax.Array | None = None,
+    k_pos: jax.Array | None = None,  # [B, Sk]
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    b, sq, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(cfg.dtype)).reshape(b, sq, h, hd)
+    q = constrain(q, "batch", None, "heads", None)
+    k = (x @ p["wk"].astype(cfg.dtype)).reshape(b, sq, kv, hd)
+    v = (x @ p["wv"].astype(cfg.dtype)).reshape(b, sq, kv, hd)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if k_cache is not None:
+        k_full = jnp.concatenate([k_cache.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([v_cache.astype(v.dtype), v], axis=1)
+        kp = jnp.concatenate([k_pos, positions], axis=1)
+    else:
+        k_full, v_full, kp = k, v, positions
+
+    o = gqa_attention(
+        q, k_full, v_full, positions, kp, window=cfg.sliding_window
+    ).reshape(b, sq, h * hd)
+    return o @ p["wo"].astype(cfg.dtype), (k_full, v_full)
+
+
+def swiglu(p: dict, x: jax.Array, dtype) -> jax.Array:
+    g = jax.nn.silu(x @ p["w_gate"].astype(dtype))
+    u = x @ p["w_up"].astype(dtype)
+    return (g * u) @ p["w_down"].astype(dtype)
+
+
+def moe_block(
+    cfg: LMConfig, p: dict, x: jax.Array, groups: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with *group-local* sort-based dispatch.
+
+    The token stream is blocked into ``G`` shard-local groups (G = the batch
+    sharding degree from the logical-axis context; 1 on CPU).  Within each
+    group: sort (token, k) slots by expert, derive each slot's position in
+    its expert from the sorted prefix, scatter into a [E, C_local, d] buffer
+    (out-of-capacity slots dropped via ``mode='drop'``), run expert FFNs
+    batched over [G, E], gather back and weight-combine.  Every tk-sized op
+    is batched over G, so SPMD partitioning is trivially local — this is the
+    per-device-capacity dispatch real MoE systems use (GShard/MegaBlocks),
+    never the [T, E, C] one-hot.  Returns (output, aux_load_balance_loss).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.n_experts
+    from repro.distributed.ctx import group_count
+
+    g_ = groups if groups is not None else group_count("batch", t)
+    tl = t // g_  # tokens per group
+    tkl = tl * k
+    xg = constrain(x.reshape(g_, tl, d), "batch", None, None)
+
+    gate_logits = (xg @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)  # [G, tl, E]
+    topw, topi = jax.lax.top_k(probs, k)  # [G, tl, K]
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    e_flat = topi.reshape(g_, tkl)
+    w_flat = topw.reshape(g_, tkl).astype(cfg.dtype)
+    tok_flat = jnp.broadcast_to(
+        jnp.arange(tkl, dtype=jnp.int32) // k, (g_, tkl)
+    )
+    order = jnp.argsort(e_flat, axis=-1, stable=True)
+    e_s = jnp.take_along_axis(e_flat, order, -1)  # [G, TKl]
+    tok_s = jnp.take_along_axis(tok_flat, order, -1)
+    w_s = jnp.take_along_axis(w_flat, order, -1)
+
+    counts = jax.vmap(lambda es: jnp.bincount(es, length=e))(e_s)  # [G, E]
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    pos = jnp.arange(tkl, dtype=jnp.int32)[None] - jnp.take_along_axis(
+        starts, e_s, -1
+    )  # slot within (group, expert)
+
+    cap = max(int(math.ceil(tl * k / e * m.capacity_factor)), k)
+
+    def dispatch(xv, ev, pv, tv):  # per group, all local
+        return jnp.zeros((e, cap, d), cfg.dtype).at[ev, pv].add(
+            xv[tv], mode="drop"
+        )
+
+    buf = jax.vmap(dispatch)(xg.astype(cfg.dtype), e_s, pos, tok_s)
+    buf = constrain(buf, "batch", "expert", None, None)  # [G, E, C, d]
+
+    gact = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(cfg.dtype))
+    )
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(cfg.dtype))
+    ye = constrain(
+        jnp.einsum("gecf,efd->gecd", gact * u, p["w_down"].astype(cfg.dtype)),
+        "batch", "expert", None, None,
+    )
+
+    def combine(yv, ev, pv, tv, wv):  # per group, all local
+        vals = yv.at[ev, pv].get(mode="fill", fill_value=0)  # [TKl, d]
+        return jnp.zeros((tl, d), cfg.dtype).at[tv].add(vals * wv[:, None])
+
+    yt = jax.vmap(combine)(ye, e_s, pos, tok_s, w_s)  # [G, tl, d]
+    yt = constrain(yt, "batch", None, None)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    frac = jnp.sum(counts, axis=0).astype(jnp.float32) / (g_ * tkl)
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * pmean)
+    return yt.reshape(b, s, d), aux
+
+
+# --------------------------------------------------------------------- #
+# forward passes
+# --------------------------------------------------------------------- #
+def _layer_fwd(cfg: LMConfig, lp: dict, x, positions):
+    a, _ = attention(cfg, lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), positions)
+    x = x + a
+    hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, aux = moe_block(cfg, lp["moe"], hin)
+    else:
+        y, aux = swiglu(lp["mlp"], hin, cfg.dtype), jnp.float32(0)
+    return x + y, aux
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward: tokens [B, S] -> (hidden [B, S, d], aux).
+
+    The unembedding is applied separately (chunked, in the loss / serving
+    head) so the full [B, S, V] logits tensor is never materialized.
+    """
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(
+        params["embed"].astype(cfg.dtype)[tokens], "batch", None, None
+    )
+
+    layer_fn = _layer_fwd
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            _layer_fwd, static_argnums=(0,), prevent_cse=False
+        )
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        x, a = layer_fn(cfg, lp, x, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0)), params["layers"])
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux / cfg.n_layers
+
+
+def logits_of(cfg: LMConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    return hidden @ params["unembed"].astype(cfg.dtype)
+
+
+def chunked_ce(
+    cfg: LMConfig,
+    params: dict,
+    hidden: jax.Array,  # [B, S, d]
+    labels: jax.Array,  # [B, S] (-1 = masked)
+    chunk: int = 1024,
+) -> jax.Array:
+    """Cross entropy without materializing [B, S, V]: scan over sequence
+    chunks; per chunk compute logits, logsumexp, and the target logit via a
+    one-hot contraction (keeps the vocab axis sharded under TP)."""
+    b, s, d = hidden.shape
+    w = params["unembed"].astype(cfg.dtype)
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    h = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    l = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    h = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    l = l.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs  # [B, c, d], [B, c]
+        logits = constrain(
+            (hc @ w).astype(jnp.float32), "batch", None, "vocab"
+        )  # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = constrain(
+            jax.nn.one_hot(jnp.maximum(lc, 0), cfg.vocab, dtype=jnp.float32),
+            "batch", None, "vocab",
+        )
+        tgt = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        mask = (lc >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((lse - tgt) * mask), cnt + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (h, l))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def prefill_step(
+    cfg: LMConfig, params: dict, tokens: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Serving prefill: build the KV cache, return last-position logits."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    win = cfg.sliding_window
+
+    def body(x, lp):
+        a, (k, v) = attention(
+            cfg, lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), positions
+        )
+        x = x + a
+        hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            y, _ = moe_block(cfg, lp["moe"], hin)
+        else:
+            y = swiglu(lp["mlp"], hin, cfg.dtype)
+        if win is not None:
+            k, v = k[:, -win:], v[:, -win:]
+        return x + y, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    last_logits = x[:, -1] @ params["unembed"].astype(cfg.dtype)
+    s_c = ks.shape[2]
+    cache = {"k": ks, "v": vs, "pos": jnp.full((b,), s, jnp.int32)}
+    return last_logits, cache
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, seq: int) -> dict:
+    """Pre-filled KV cache stand-in for decode shapes.  For sliding-window
+    attention the cache only ever holds the last ``window`` positions."""
+    s = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (cfg.n_layers, batch, s, kv, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.zeros((batch,), jnp.int32) + s,
+    }
+
+
+def decode_step(
+    cfg: LMConfig, params: dict, cache: dict, tokens: jax.Array
+) -> tuple[jax.Array, dict]:
+    """One-token decode: tokens [B, 1]; rolling cache for SWA."""
+    b = tokens.shape[0]
+    positions = cache["pos"][:, None]  # [B, 1]
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    s_cache = cache["k"].shape[2]
+    k_pos = positions - s_cache + jnp.arange(s_cache, dtype=jnp.int32)[None, :]
+
+    def body(carry, inp):
+        x = carry
+        lp, kc, vc = inp
+        a, (k_new, v_new) = attention(
+            cfg,
+            lp["attn"],
+            rmsnorm(x, lp["ln1"], cfg.norm_eps),
+            positions,
+            k_cache=kc,
+            v_cache=vc,
+            k_pos=k_pos,
+        )
+        x = x + a
+        hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            y, _ = moe_block(cfg, lp["moe"], hin)
+        else:
+            y = swiglu(lp["mlp"], hin, cfg.dtype)
+        # roll the cache: drop oldest position, append the new one
+        return x + y, (k_new[:, 1:], v_new[:, 1:])
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(cfg.dtype)
+    new_cache = {"k": k_c, "v": v_c, "pos": cache["pos"] + 1}
+    return logits, new_cache
+
+
+def cast_params(cfg: LMConfig, params: dict) -> dict:
+    """Cast f32 master params to the activation dtype ONCE, while still
+    sharded — so every FSDP all-gather downstream moves bf16, not f32
+    (EXPERIMENTS §Perf, qwen3 train iteration 1).  No-op for bf16 params."""
+    return jax.tree.map(
+        lambda x: x.astype(cfg.dtype) if x.dtype == jnp.float32 else x, params
+    )
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict) -> jax.Array:
+    params = cast_params(cfg, params)
+    hidden, aux = forward(cfg, params, batch["tokens"])
+    loss = chunked_ce(cfg, params, hidden, batch["labels"])
+    return loss + 0.01 * aux

@@ -1,0 +1,64 @@
+"""Gradient compression for DCI-bound (cross-pod) data parallelism.
+
+Top-k sparsification with error feedback (memory): each step transmits only
+the largest-|g| fraction of each gradient tensor; the residual is carried to
+the next step.  On a (pod, data, model) mesh the compressed gradient is what
+crosses the pod axis; within a pod the full gradient reduces over ICI.
+
+This is a *pre-reduce* transform: ``compress`` -> (sparse grads as dense
+masked tensors, new error memory).  XLA's all-reduce of a mostly-zero tensor
+does not shrink bytes by itself, so the practical win comes from pairing
+with int8 quantization (``quantize_int8``) which does shrink the wire format.
+Both are exposed as composable hooks on the train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def topk_sparsify(grads, error, fraction: float = 0.01):
+    """Keep the top-``fraction`` entries (by magnitude) of grad+error."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        flat = jnp.abs(g).reshape(-1)
+        k = max(1, int(flat.shape[0] * fraction))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        kept = jnp.where(mask, g, 0.0)
+        return kept, g - kept
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )
+
+
+def quantize_int8(grads):
+    """Blockwise symmetric int8 quantization; returns (q, scales)."""
+
+    def one(g):
+        g = g.astype(jnp.float32)
+        s = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+        return jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8), s
+
+    flat, treedef = jax.tree.flatten(grads)
+    qs = [one(g) for g in flat]
+    return (
+        treedef.unflatten([q for q, _ in qs]),
+        treedef.unflatten([s for _, s in qs]),
+    )
+
+
+def dequantize_int8(q, scales):
+    return jax.tree.map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales
+    )

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests must see the single real CPU device; only launch/dryrun.py forces 512
+placeholder devices (and only in its own process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

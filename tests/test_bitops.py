@@ -1,0 +1,44 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n) < 0.4
+    packed = bitops.pack(jnp.asarray(bits))
+    assert packed.shape[-1] == bitops.packed_width(n)
+    back = np.asarray(bitops.unpack(packed, n))
+    assert np.array_equal(back, bits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 150), st.integers(0, 2**31 - 1))
+def test_popcount_and_any(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.random((3, n)) < 0.3
+    packed = bitops.pack(jnp.asarray(bits))
+    assert np.array_equal(np.asarray(bitops.popcount(packed)), bits.sum(-1))
+    assert np.array_equal(np.asarray(bitops.any_set(packed)), bits.any(-1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 100), st.integers(0, 2**31 - 1))
+def test_leq_matches_set_inclusion(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random(n) < 0.3
+    b = a | (rng.random(n) < 0.2)
+    pa, pb = bitops.pack(jnp.asarray(a)), bitops.pack(jnp.asarray(b))
+    assert bool(bitops.leq(pa, pb))
+    # strict superset the other way iff b != a
+    if (b & ~a).any():
+        assert not bool(bitops.leq(pb, pa))
+
+
+def test_ones_mask_trailing_bits():
+    m = bitops.ones_mask(70)
+    assert np.asarray(bitops.popcount(jnp.asarray(m))) == 70

@@ -1,0 +1,119 @@
+"""Pallas kernel sweeps: shapes x densities vs the pure-jnp oracle, in
+interpret mode (CPU executes the kernel body)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops
+from repro.kernels.bitmm import kernel as kmod
+from repro.kernels.bitmm import ops as kops
+from repro.kernels.bitmm import ref as kref
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 100, 257, 300])
+@pytest.mark.parametrize("v", [1, 5, 9])
+def test_bitmm_shape_sweep(n, v):
+    rng = np.random.default_rng(n * 100 + v)
+    a = rng.random((n, n)) < 0.1
+    x = rng.random((v, n)) < 0.4
+    ap = jnp.asarray(bitops.pack(jnp.asarray(a)))
+    out = kops.bitmm(jnp.asarray(x), ap, interpret=True)
+    exp = kref.bitmm_ref(jnp.asarray(x), ap, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("density", [0.0, 0.01, 0.5, 1.0])
+def test_bitmm_density_sweep(density):
+    rng = np.random.default_rng(17)
+    n = 130
+    a = rng.random((n, n)) < density
+    x = rng.random((4, n)) < 0.5
+    ap = jnp.asarray(bitops.pack(jnp.asarray(a)))
+    out = kops.bitmm(jnp.asarray(x), ap, interpret=True)
+    exp = kref.bitmm_ref(jnp.asarray(x), ap, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("blocks", [(64, 128), (128, 256), (256, 128)])
+def test_bitmm_block_shapes(blocks):
+    bi, bjw = blocks
+    rng = np.random.default_rng(3)
+    n = 520
+    a = rng.random((n, n)) < 0.05
+    x = rng.random((3, n)) < 0.3
+    ap = jnp.asarray(bitops.pack(jnp.asarray(a)))
+    out = kmod.bitmm_packed(
+        jnp.asarray(x, jnp.uint32), ap, block_i=bi, block_jw=bjw, interpret=True
+    )
+    exp = kref.bitmm_packed_ref(jnp.asarray(x), ap, n)
+    np.testing.assert_array_equal(np.asarray(out)[:, : exp.shape[1]], np.asarray(exp))
+
+
+def test_bitmm_packed_frontier_variant():
+    rng = np.random.default_rng(5)
+    n = 200
+    a = rng.random((n, n)) < 0.1
+    x = rng.random((2, n)) < 0.4
+    ap = jnp.asarray(bitops.pack(jnp.asarray(a)))
+    xp = jnp.asarray(bitops.pack(jnp.asarray(x)))
+    out = kops.bitmm_packed(xp, ap, interpret=True)
+    exp = kref.bitmm_packed_ref(jnp.asarray(x), ap, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_bitmm_empty_frontier():
+    n = 64
+    a = np.eye(n, dtype=bool)
+    x = np.zeros((2, n), dtype=bool)
+    ap = jnp.asarray(bitops.pack(jnp.asarray(a)))
+    out = kops.bitmm(jnp.asarray(x), ap, interpret=True)
+    assert not np.asarray(out).any()
+
+
+# --------------------------------------------------------------------- #
+# segsum kernel (windowed one-hot-matmul segment sum)
+# --------------------------------------------------------------------- #
+from repro.kernels.segsum import ops as sops
+from repro.kernels.segsum import ref as sref
+
+
+@pytest.mark.parametrize("e,n,d", [(100, 64, 8), (1000, 300, 16),
+                                   (37, 513, 3), (5000, 100, 70)])
+def test_segsum_shape_sweep(e, n, d):
+    rng = np.random.default_rng(e + n + d)
+    vals = rng.normal(size=(e, d)).astype(np.float32)
+    ids = rng.integers(0, n, e).astype(np.int32)
+    out = sops.segsum(vals, ids, n, interpret=True)
+    exp = sref.segsum_ref(jnp.asarray(vals[np.argsort(ids, kind='stable')]),
+                          jnp.asarray(np.sort(ids)), n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_segsum_dtypes(dtype):
+    rng = np.random.default_rng(9)
+    vals = rng.normal(size=(200, 5)).astype(dtype)
+    ids = rng.integers(0, 40, 200).astype(np.int32)
+    out = sops.segsum(vals, ids, 40, interpret=True)
+    exp = sops.segsum(vals, ids, 40, use_ref=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5)
+
+
+def test_segsum_empty_and_single_segment():
+    out = sops.segsum(np.zeros((0, 4), np.float32), np.zeros(0, np.int32), 8,
+                      interpret=True)
+    assert out.shape == (8, 4) and not np.asarray(out).any()
+    vals = np.ones((16, 4), np.float32)
+    out = sops.segsum(vals, np.zeros(16, np.int32), 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), [[16.0] * 4])
+
+
+def test_segsum_block_boundary_ids():
+    """ids exactly at window boundaries exercise the block-split path."""
+    n, bn = 600, 256
+    ids = np.asarray([0, 255, 256, 257, 511, 512, 599] * 10, np.int32)
+    vals = np.ones((len(ids), 2), np.float32)
+    out = sops.segsum(vals, ids, n, block_n=bn, interpret=True)
+    exp = sops.segsum(vals, ids, n, use_ref=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp))

@@ -1,0 +1,116 @@
+"""LM family: reduced-config smoke + decode/prefill consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+
+
+def _tiny(moe=False, window=None, qk_norm=False):
+    return T.LMConfig(
+        name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=101, head_dim=16, qk_norm=qk_norm,
+        sliding_window=window,
+        moe=T.MoEConfig(n_experts=4, top_k=2, d_expert=32, capacity_factor=4.0)
+        if moe else None,
+        dtype=jnp.float32, remat=False,
+    )
+
+
+@pytest.mark.parametrize("moe", [False, True])
+@pytest.mark.parametrize("qk_norm", [False, True])
+def test_forward_and_loss_finite(moe, qk_norm):
+    cfg = _tiny(moe=moe, qk_norm=qk_norm)
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
+    hidden, aux = T.forward(cfg, p, toks)
+    assert hidden.shape == (2, 24, cfg.d_model)
+    loss = T.loss_fn(cfg, p, {"tokens": toks, "labels": toks})
+    assert np.isfinite(float(loss))
+
+
+def test_chunked_ce_matches_direct():
+    cfg = _tiny()
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    hidden, _ = T.forward(cfg, p, toks)
+    chunked = T.chunked_ce(cfg, p, hidden, toks, chunk=8)
+    logits = T.logits_of(cfg, p, hidden).astype(jnp.float32)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    direct = -jnp.take_along_axis(lp, toks[..., None], axis=-1).mean()
+    np.testing.assert_allclose(float(chunked), float(direct), rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_prefill_decode_matches_forward(window):
+    """Decode with a prefilled cache must reproduce teacher-forced logits."""
+    cfg = _tiny(window=window)
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    s = 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, s + 1), 0, cfg.vocab)
+    # teacher-forced logits at position s (predicting s+1)
+    hidden, _ = T.forward(cfg, p, toks)
+    full_logits = T.logits_of(cfg, p, hidden)[:, s - 1 + 1]
+    # hmm: decode path below predicts from token s given cache of 0..s-1
+    _, cache = T.prefill_step(cfg, p, toks[:, :s])
+    dec_logits, cache2 = T.decode_step(cfg, p, cache, toks[:, s : s + 1])
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(full_logits), atol=2e-4
+    )
+    assert int(cache2["pos"][0]) == int(cache["pos"][0]) + 1
+
+
+def test_swa_cache_is_window_sized():
+    cfg = _tiny(window=8)
+    cache = T.init_kv_cache(cfg, batch=2, seq=1000)
+    assert cache["k"].shape[2] == 8
+
+
+def test_rope_positions_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    cfg = _tiny()
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 16))
+    pos = jnp.arange(4)[None, :]
+    q1 = T.rope(q, pos, cfg.rope_theta)
+    k1 = T.rope(k, pos, cfg.rope_theta)
+    q2 = T.rope(q, pos + 100, cfg.rope_theta)
+    k2 = T.rope(k, pos + 100, cfg.rope_theta)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+    s2 = jnp.einsum("bqhd,bkhd->bhqk", q2, k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+def test_moe_capacity_drop_is_bounded():
+    """With capacity_factor=1.0 overflow tokens are dropped, never NaN."""
+    cfg = dataclasses.replace(
+        _tiny(moe=True),
+        moe=T.MoEConfig(n_experts=4, top_k=2, d_expert=32, capacity_factor=1.0),
+    )
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+    loss = T.loss_fn(cfg, p, {"tokens": toks, "labels": toks})
+    assert np.isfinite(float(loss))
+
+
+def test_train_step_decreases_loss():
+    from repro.models import steps
+    from repro.optimizer import adamw
+
+    cfg = _tiny()
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=5e-3, warmup_steps=1, weight_decay=0.0)
+    ost = adamw.init(p)
+    step = jax.jit(steps.make_train_step(
+        lambda pp, bb: T.loss_fn(cfg, pp, bb), opt_cfg, microbatches=2
+    ))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    losses = []
+    for _ in range(8):
+        p, ost, m = step(p, ost, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,158 @@
+"""SOI construction for the SPARQL fragment S: parser, mand(), optional
+renaming (Lemmas 4/5 + the Sect. 4.4 'syntactically closest' rule), and the
+soundness theorem (Thm. 2) as a property test against the join evaluator."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dualsim, join, soi, sparql
+from repro.core.sparql import And, BGP, Optional_, Union_, parse
+from repro.data import synth
+
+LABELS = ["p0", "p1", "p2"]
+VARS = ["a", "b", "c", "d"]
+
+
+def test_parser_roundtrip_shapes():
+    q = parse("{ ?a p0 ?b . ?b p1 ?c } OPTIONAL { ?c p2 ?d }")
+    assert isinstance(q, Optional_)
+    assert sparql.vars_of(q) == {"a", "b", "c", "d"}
+    assert sparql.mand(q) == {"a", "b", "c"}
+
+
+def test_parser_constants():
+    q = parse("{ ?a p0 Berlin }")
+    t = q.triples[0]
+    assert isinstance(t.o, sparql.Const) and t.o.name == "Berlin"
+
+
+def test_union_split_distributes():
+    q = parse("{ { ?a p0 ?b } UNION { ?a p1 ?b } } AND { ?b p2 ?c }")
+    parts = sparql.union_split(q)
+    assert len(parts) == 2
+    assert all(sparql.is_union_free(p) for p in parts)
+
+
+def test_optional_renaming_x2():
+    q = parse("{ ?d p0 ?m } OPTIONAL { ?d p1 ?c }")
+    s = soi.build_soi(q)
+    # one surrogate for ?d, linked by exactly one copy inequality
+    assert s.base.count("d") == 2
+    assert len(s.copy_ineqs) == 1
+    lhs, rhs = s.copy_ineqs[0]
+    assert s.base[lhs] == "d" and rhs == s.external_mand["d"]
+
+
+def test_nested_closest_chain():
+    """R1 OPT (R2 OPT R3) sharing ?z gives z_R3 <= z_R2 <= z (Sect. 4.4)."""
+    q = parse("{ ?z p0 ?x } OPTIONAL { { ?z p1 ?y } OPTIONAL { ?z p2 ?u } }")
+    s = soi.build_soi(q)
+    z_ids = [i for i, b in enumerate(s.base) if b == "z"]
+    assert len(z_ids) == 3
+    copies = set(s.copy_ineqs)
+    # chain: exactly two copy links among the three z occurrences
+    z_copies = [(l, r) for (l, r) in copies if s.base[l] == "z"]
+    assert len(z_copies) == 2
+    # one of them must point at the mandatory z
+    assert any(r == s.external_mand["z"] for _, r in z_copies)
+
+
+def test_non_well_designed_x3():
+    q = parse("{ { ?v1 p0 ?v2 } OPTIONAL { ?v3 p1 ?v2 } } AND { ?v3 p2 ?v4 }")
+    s = soi.build_soi(q)
+    assert s.base.count("v3") == 2  # optional occurrence renamed apart
+    assert len(s.copy_ineqs) == 2  # v2_opt <= v2, v3_opt <= v3
+
+
+def test_optional_only_vars_not_linked():
+    """x in two optional branches, never mandatory: independent surrogates."""
+    q = parse("{ { ?a p0 ?b } OPTIONAL { ?x p1 ?a } } OPTIONAL { ?x p2 ?a }")
+    s = soi.build_soi(q)
+    x_ids = [i for i, b in enumerate(s.base) if b == "x"]
+    assert len(x_ids) == 2
+    assert not any(s.base[l] == "x" for l, _ in s.copy_ineqs)
+
+
+# --------------------------------------------------------------------- #
+# soundness property (Theorem 2)
+# --------------------------------------------------------------------- #
+def _queries():
+    triple = st.tuples(
+        st.sampled_from(VARS), st.sampled_from(LABELS), st.sampled_from(VARS)
+    ).map(lambda t: (f"?{t[0]}", t[1], f"?{t[2]}"))
+    bgp = st.lists(triple, min_size=1, max_size=3).map(
+        lambda ts: synth.bgp_of_triples(*ts)
+    )
+    return st.recursive(
+        bgp,
+        lambda children: st.builds(And, children, children)
+        | st.builds(Optional_, children, children)
+        | st.builds(Union_, children, children),
+        max_leaves=4,
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(_queries(), st.integers(0, 1000))
+def test_soundness_every_match_in_largest_solution(q, seed):
+    """Thm. 2: for every match mu and var v, (v, mu(v)) is in the largest
+    SOI solution — over the union-free parts, whose solutions are unioned."""
+    g = synth.dbpedia_like(n_nodes=25, n_labels=3, n_edges=60, seed=seed)
+    matches = join.evaluate(q, g)
+    collected: dict[str, np.ndarray] = {}
+    for part in sparql.union_split(q):
+        s = soi.build_soi(part)
+        c = soi.compile_soi(s, g)
+        chi, _ = dualsim.solve_compiled(c, g, engine="dense")
+        for var, row in soi.collect(s, chi).items():
+            collected[var] = collected.get(var, np.zeros(g.n_nodes, bool)) | row
+    for var, col in matches.cols.items():
+        for val in np.unique(col):
+            if val >= 0:
+                assert collected[var][val], (
+                    f"match binding {var}={val} missing from S_max"
+                )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_soundness_with_constants(seed):
+    g = synth.dbpedia_like(n_nodes=20, n_labels=3, n_edges=50, seed=seed)
+    const = g.node_names[seed % g.n_nodes]
+    q = sparql.parse(f"{{ ?a p0 {const} . ?a p1 ?b }}")
+    matches = join.evaluate(q, g)
+    s = soi.build_soi(q)
+    c = soi.compile_soi(s, g)
+    chi, _ = dualsim.solve_compiled(c, g, engine="dense")
+    res = soi.collect(s, chi)
+    for var, col in matches.cols.items():
+        for val in np.unique(col):
+            if val >= 0:
+                assert res[var][val]
+
+
+def test_regression_multi_merge_stale_ids():
+    """Regression (found by the soundness property test): when AND merges
+    several shared variables, later merge pairs must be translated through
+    earlier id compactions, or a surrogate gets merged in place of its
+    mandatory original and the copy inequality inverts."""
+    q = And(
+        synth.bgp_of_triples(("?a", "p0", "?b")),
+        Optional_(
+            synth.bgp_of_triples(("?b", "p2", "?a")),
+            synth.bgp_of_triples(("?a", "p0", "?a")),
+        ),
+    )
+    s = soi.build_soi(q)
+    # the surrogate (third 'a' occurrence) must be the copy LHS, never RHS
+    for l, r in s.copy_ineqs:
+        assert r == s.external_mand["a"]
+        assert l != s.external_mand["a"]
+    g = synth.dbpedia_like(n_nodes=25, n_labels=3, n_edges=60, seed=0)
+    c = soi.compile_soi(s, g)
+    chi, _ = dualsim.solve_compiled(c, g, engine="dense")
+    res = soi.collect(s, np.asarray(chi))
+    m = join.evaluate(q, g)
+    for var, col in m.cols.items():
+        for val in np.unique(col):
+            if val >= 0:
+                assert res[var][val], (var, val)
