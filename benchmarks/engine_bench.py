@@ -1,0 +1,131 @@
+"""Engine-subsystem benchmark: cold vs warm plan-cache latency and
+microbatched throughput (issue acceptance: warm-path latency of a
+constant-rebound template >= 5x lower than the cold path).
+
+    PYTHONPATH=src python -m benchmarks.engine_bench
+    PYTHONPATH=src python benchmarks/engine_bench.py --universities 8
+
+Two sections, printed as ``name,us_per_call,derived`` CSV lines (scaffold
+contract of benchmarks/run.py) and written to results/bench/engine.json:
+
+* ``cold_warm`` — first execution of a template (parse + SOI build/compile +
+  operand upload + jit trace) vs repeated executions that only rebind
+  constants (cache hit, zero retraces).  The ratio is the whole point of the
+  plan cache: serving latency is the fixpoint, not compilation.
+* ``throughput`` — requests/second through ``Engine.execute_many`` at
+  several microbatch sizes over the LUBM-like "same template, many
+  constants" workload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.data import synth
+from repro.engine import Engine
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def _mk_requests(db, n: int, seed: int = 0) -> list[str]:
+    unis = [x for x in db.node_names if x.startswith("Univ")]
+    rng = np.random.default_rng(seed)
+    return [
+        f"{{ ?d subOrganizationOf {unis[rng.integers(len(unis))]} . "
+        f"?s memberOf ?d }}"
+        for _ in range(n)
+    ]
+
+
+def cold_warm(db, *, engine: str = "auto", warm_iters: int = 20) -> dict:
+    """Cold (first-ever) vs warm (constant-rebound) execute latency."""
+    eng = Engine(db, engine=engine)
+    reqs = _mk_requests(db, warm_iters + 1)
+
+    t0 = time.perf_counter()
+    first = eng.execute(reqs[0])
+    t_cold = time.perf_counter() - t0
+
+    warm_times = []
+    for q in reqs[1:]:
+        t0 = time.perf_counter()
+        res = eng.execute(q)
+        warm_times.append(time.perf_counter() - t0)
+        assert res.cache_hit, "warm request missed the plan cache"
+    t_warm = float(np.median(warm_times))
+
+    m = eng.metrics()
+    return {
+        "bench": "cold_warm",
+        "engine": first.engine,
+        "t_cold": t_cold,
+        "t_warm": t_warm,
+        "speedup": t_cold / t_warm,
+        "plan_builds": m.plan_builds,
+        "cache_hits": m.cache.hits,
+        "n_nodes": db.n_nodes,
+        "n_triples": db.n_edges,
+    }
+
+
+def throughput(db, *, engine: str = "auto", batch_sizes=(1, 4, 8, 16),
+               n_requests: int = 64) -> list[dict]:
+    """Requests/second through execute_many at several microbatch sizes."""
+    rows = []
+    for batch in batch_sizes:
+        eng = Engine(db, engine=engine)
+        reqs = _mk_requests(db, n_requests, seed=batch)
+        # warm pass: chunks with fewer unique constants hit smaller buckets,
+        # so a full pass is needed to build every (template, bucket) plan
+        for s in range(0, n_requests, batch):
+            eng.execute_many(reqs[s : s + batch])
+        t0 = time.perf_counter()
+        for s in range(0, n_requests, batch):
+            eng.execute_many(reqs[s : s + batch])
+        dt = time.perf_counter() - t0
+        m = eng.metrics()
+        rows.append({
+            "bench": f"throughput_b{batch}",
+            "batch": batch,
+            "req_per_s": n_requests / dt,
+            "t_total": dt,
+            "engines": m.engine_counts,
+            "cache_hit_rate": m.cache.hit_rate,
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--universities", type=int, default=8)
+    ap.add_argument("--engine", default="auto")
+    ap.add_argument("--requests", type=int, default=64)
+    args = ap.parse_args()
+
+    db = synth.lubm_like(n_universities=args.universities, seed=0)
+    print(f"# database: {db.n_edges} triples / {db.n_nodes} nodes")
+
+    rows = [cold_warm(db, engine=args.engine)]
+    rows += throughput(db, engine=args.engine, n_requests=args.requests)
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "engine.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+    cw = rows[0]
+    print(f"engine/cold,{cw['t_cold']*1e6:.1f},engine={cw['engine']}")
+    print(f"engine/warm,{cw['t_warm']*1e6:.1f},speedup={cw['speedup']:.1f}x")
+    for r in rows[1:]:
+        print(f"engine/{r['bench']},{r['t_total']*1e6:.1f},"
+              f"req_per_s={r['req_per_s']:.1f}")
+    ok = cw["speedup"] >= 5.0
+    print(f"# warm-path speedup {cw['speedup']:.1f}x "
+          f"({'meets' if ok else 'BELOW'} the 5x acceptance bar)")
+
+
+if __name__ == "__main__":
+    main()

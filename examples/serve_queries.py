@@ -2,10 +2,18 @@
 
     PYTHONPATH=src python examples/serve_queries.py
 """
+import os
 import subprocess
 import sys
 
 cmd = [sys.executable, "-m", "repro.launch.serve", "--batch", "4",
-       "--requests", "12", "--engine", "sparse"]
+       "--requests", "12", "--engine", "auto"]
 print("+", " ".join(cmd))
-subprocess.run(cmd, check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+# inherit the full environment (virtualenvs need their own PATH/PYTHONPATH);
+# just make sure the repo's src/ is importable from any cwd.
+env = dict(os.environ)
+src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+env["PYTHONPATH"] = src + (
+    os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+)
+subprocess.run(cmd, check=True, env=env)

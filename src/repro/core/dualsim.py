@@ -124,30 +124,66 @@ def _base_operands(c: CompiledSOI) -> dict:
     )
 
 
-def make_dense_operands(c: CompiledSOI, g: Graph) -> Operands:
-    adj = np.stack(
-        [g.dense_adjacency(a, backward=(d == BWD)) for (a, d) in c.mats]
-    ) if c.mats else np.zeros((0, g.n_nodes, g.n_nodes), dtype=bool)
-    return Operands(adj_dense=jnp.asarray(adj), **_base_operands(c))
+def _cached_adj(adj_cache: dict | None, key, g: Graph, build):
+    """Adjacency depends only on (engine, mats, graph) — never on the SOI's
+    variables — so plan caches share it across templates and batch buckets.
+    Entries store the graph they were built from and only hit on the *same*
+    graph object: sharing one cache dict across graphs can never return
+    another graph's adjacency (it just misses and rebuilds)."""
+    if adj_cache is not None:
+        try:
+            hit_g, adj = adj_cache[key]
+        except KeyError:
+            pass
+        else:
+            if hit_g is g:
+                return adj
+    adj = build()
+    if adj_cache is not None:
+        adj_cache[key] = (g, adj)
+    return adj
 
 
-def make_packed_operands(c: CompiledSOI, g: Graph) -> Operands:
-    adj = np.stack(
-        [g.packed_adjacency(a, backward=(d == BWD)) for (a, d) in c.mats]
-    ) if c.mats else np.zeros((0, g.n_nodes, bitops.packed_width(g.n_nodes)), np.uint32)
-    return Operands(adj_packed=jnp.asarray(adj), **_base_operands(c))
+def make_dense_operands(
+    c: CompiledSOI, g: Graph, adj_cache: dict | None = None
+) -> Operands:
+    def build():
+        adj = np.stack(
+            [g.dense_adjacency(a, backward=(d == BWD)) for (a, d) in c.mats]
+        ) if c.mats else np.zeros((0, g.n_nodes, g.n_nodes), dtype=bool)
+        return jnp.asarray(adj)
+
+    adj = _cached_adj(adj_cache, ("dense", tuple(c.mats)), g, build)
+    return Operands(adj_dense=adj, **_base_operands(c))
 
 
-def make_sparse_operands(c: CompiledSOI, g: Graph) -> Operands:
-    srcs, dsts = [], []
-    for a, d in c.mats:
-        e = g.edges_for_label(a)
-        s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
-        srcs.append(jnp.asarray(s, jnp.int32))
-        dsts.append(jnp.asarray(t, jnp.int32))
-    return Operands(
-        edge_src=tuple(srcs), edge_dst=tuple(dsts), **_base_operands(c)
-    )
+def make_packed_operands(
+    c: CompiledSOI, g: Graph, adj_cache: dict | None = None
+) -> Operands:
+    def build():
+        adj = np.stack(
+            [g.packed_adjacency(a, backward=(d == BWD)) for (a, d) in c.mats]
+        ) if c.mats else np.zeros((0, g.n_nodes, bitops.packed_width(g.n_nodes)), np.uint32)
+        return jnp.asarray(adj)
+
+    adj = _cached_adj(adj_cache, ("packed", tuple(c.mats)), g, build)
+    return Operands(adj_packed=adj, **_base_operands(c))
+
+
+def make_sparse_operands(
+    c: CompiledSOI, g: Graph, adj_cache: dict | None = None
+) -> Operands:
+    def build():
+        srcs, dsts = [], []
+        for a, d in c.mats:
+            e = g.edges_for_label(a)
+            s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
+            srcs.append(jnp.asarray(s, jnp.int32))
+            dsts.append(jnp.asarray(t, jnp.int32))
+        return tuple(srcs), tuple(dsts)
+
+    src, dst = _cached_adj(adj_cache, ("sparse", tuple(c.mats)), g, build)
+    return Operands(edge_src=src, edge_dst=dst, **_base_operands(c))
 
 
 def make_partitioned_operands(

@@ -1,0 +1,56 @@
+"""`repro.engine` — the production query-engine subsystem (DESIGN.md Sect. 5).
+
+Ties the whole pipeline together — ``sparql`` → ``union_split`` → ``soi`` →
+``dualsim`` → ``pruning`` → ``join`` — behind one facade::
+
+    from repro.engine import Engine
+    eng = Engine(db)                      # cost model picks the fixpoint engine
+    res = eng.execute("{ ?d subOrganizationOf Univ3 . ?s memberOf ?d }")
+    res.survivors, res.bindings, res.timings, res.cache_hit
+
+The key mechanism is *parameterized plan caching*: constants are abstracted
+out of a parsed query into a canonical template (:mod:`template`), the
+template is compiled once into a :class:`~repro.engine.plan.CompiledPlan`
+whose jitted fixpoint takes the per-request constant rows as an *input*
+(:mod:`plan`), and subsequent requests with the same shape rebind constants
+with zero SOI recompilation and zero jit retraces (:mod:`cache`).  Groups of
+same-template requests are solved as one disjoint-union SOI, padded to
+bucketed batch sizes so traces are reused (:mod:`batcher`), and the fixpoint
+engine (dense / packed / sparse) is chosen per plan by a cost model
+(:mod:`cost`) instead of a hard-coded flag.
+"""
+from .batcher import BatchLayout, MicroBatcher, batch_layout, batched_soi, bucket_for
+from .cache import CacheStats, PlanCache
+from .cost import CostEstimate, choose_engine, estimate_costs
+from .engine import Engine, EngineMetrics, ExecResult
+from .plan import CompiledPlan, PlanMetrics
+from .template import (
+    SLOT_PREFIX,
+    QueryTemplate,
+    TemplateInstance,
+    canonicalize,
+    template_key,
+)
+
+__all__ = [
+    "BatchLayout",
+    "CacheStats",
+    "CompiledPlan",
+    "CostEstimate",
+    "Engine",
+    "EngineMetrics",
+    "ExecResult",
+    "MicroBatcher",
+    "PlanCache",
+    "PlanMetrics",
+    "QueryTemplate",
+    "SLOT_PREFIX",
+    "TemplateInstance",
+    "batch_layout",
+    "batched_soi",
+    "bucket_for",
+    "canonicalize",
+    "choose_engine",
+    "estimate_costs",
+    "template_key",
+]

@@ -1,0 +1,110 @@
+"""Cost-based fixpoint-engine selection (DESIGN.md 5.3).
+
+Replaces the hard-coded ``--engine`` flag: given the database statistics and
+the compiled SOI, estimate the per-sweep work of each batched engine in
+:mod:`repro.core.dualsim` and pick the cheapest *feasible* one.  All engines
+compute the same greatest fixpoint, so the choice is purely a performance
+decision — which is what makes a closed-form model safe: a wrong pick is
+slow, never incorrect.
+
+Per-sweep model (arbitrary units; V = SOI variables, n = nodes, M = distinct
+(label, direction) operators, E = total edges touched by the SOI's
+operators):
+
+* ``dense``  — M boolean matmuls: ``V * n * n * M`` elements at matmul
+  efficiency ``C_DENSE`` (MXU/BLAS amortization).  Infeasible when the
+  stacked ``bool[M, n, n]`` adjacency exceeds ``DENSE_MAX_BYTES``.
+* ``packed`` — the Pallas bitmm path: 32 bits per word cuts element count by
+  32x, but on the CPU backend the kernel runs in interpret mode, which the
+  model charges a large penalty (packed is an accelerator engine).
+* ``sparse`` — gather + segment_max message passing: ``V * E`` messages at
+  scatter-regime cost, plus the per-operator AND-apply over ``V * n``.
+  Always feasible; the only engine at DB scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.graph import Graph
+from repro.core.soi import CompiledSOI
+
+ENGINES = ("dense", "packed", "sparse")
+
+# model constants (relative cost per element)
+C_DENSE = 1.0 / 8.0  # matmul elements amortize on MXU/BLAS
+C_PACKED = 2.0  # per uint32 word, compiled Pallas
+C_PACKED_INTERPRET = 256.0  # per word under interpret mode (CPU backend)
+PACKED_LAUNCH = 65536.0  # per-operator kernel launch overhead
+C_SPARSE = 4.0  # per edge message (gather + segment_max)
+C_APPLY = 0.5  # per chi element per operator (AND-apply)
+DENSE_MAX_BYTES = 2 << 30  # stacked bool[M, n, n] adjacency budget
+PACKED_MAX_BYTES = 2 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Chosen engine plus the full per-engine cost breakdown."""
+
+    engine: str
+    costs: dict[str, float]  # per-sweep model cost; float('inf') = infeasible
+    reason: str
+
+
+def _soi_stats(g: Graph, c: CompiledSOI) -> tuple[int, int, int]:
+    """(V, M, E_total) for a compiled SOI against ``g``."""
+    hist = g.label_histogram()
+    e_total = int(sum(hist[la] for la, _ in c.mats))
+    return c.n_vars, len(c.mats), e_total
+
+
+def estimate_costs(
+    g: Graph, c: CompiledSOI, *, backend: str | None = None
+) -> dict[str, float]:
+    """Per-sweep model cost of every engine (``inf`` when infeasible)."""
+    backend = backend or jax.default_backend()
+    v, m, e = _soi_stats(g, c)
+    n = g.n_nodes
+    n_words = (n + 31) // 32
+
+    costs: dict[str, float] = {}
+    dense_bytes = m * n * n
+    costs["dense"] = (
+        float("inf")
+        if dense_bytes > DENSE_MAX_BYTES
+        else v * n * n * m * C_DENSE
+    )
+    packed_bytes = m * n * n_words * 4
+    c_packed = C_PACKED_INTERPRET if backend == "cpu" else C_PACKED
+    costs["packed"] = (
+        float("inf")
+        if packed_bytes > PACKED_MAX_BYTES
+        else v * n * n_words * m * c_packed + m * PACKED_LAUNCH
+    )
+    costs["sparse"] = v * e * C_SPARSE + v * n * m * C_APPLY
+    return costs
+
+
+def choose_engine(
+    g: Graph,
+    c: CompiledSOI,
+    *,
+    backend: str | None = None,
+    allow: tuple[str, ...] = ENGINES,
+) -> CostEstimate:
+    """Pick the cheapest feasible engine for this (SOI, graph) pair."""
+    costs = estimate_costs(g, c, backend=backend)
+    feasible = {k: v for k, v in costs.items() if k in allow and v != float("inf")}
+    if not feasible:  # sparse is always feasible unless excluded by `allow`
+        raise ValueError(f"no feasible engine among {allow}")
+    best = min(feasible, key=feasible.get)
+    v, m, e = _soi_stats(g, c)
+    reason = (
+        f"{best}: cost {feasible[best]:.3g} over "
+        f"{{V={v}, n={g.n_nodes}, M={m}, E={e}}} "
+        f"(candidates: "
+        + ", ".join(f"{k}={costs[k]:.3g}" for k in costs)
+        + ")"
+    )
+    return CostEstimate(engine=best, costs=costs, reason=reason)

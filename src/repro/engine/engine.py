@@ -1,0 +1,294 @@
+"""The query-engine facade (DESIGN.md 5.5).
+
+``Engine(db)`` owns everything a serving process needs: the parsed-query →
+template canonicalizer, the LRU plan cache keyed by (template, graph
+fingerprint, batch bucket), the cost model that picks a fixpoint engine per
+plan, and the microbatcher that groups same-template requests into one
+disjoint-union solve.  ``execute`` handles one request end-to-end (UNION
+queries run one plan per union-free part and union the results);
+``execute_many`` batches a request list through the microbatcher.
+
+Results carry the survivor triple mask (Sect. 5 pruning), per-variable
+candidate bindings under the query's own variable names, per-stage timings,
+and the cache/batch provenance — enough for a caller to assert the warm
+path did no recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import pruning, soi as soi_mod, sparql
+from repro.core.graph import Graph
+from repro.core.sparql import Query
+
+from .batcher import DEFAULT_BUCKETS, MicroBatcher, bucket_for
+from .cache import BoundedDict, CacheStats, PlanCache
+from .plan import CompiledPlan
+from .template import TemplateInstance, canonicalize
+
+
+@dataclasses.dataclass
+class ExecResult:
+    """Outcome of one request."""
+
+    survivors: np.ndarray  # bool mask over db.triples (Sect. 5 pruning)
+    stats: pruning.PruneStats
+    bindings: dict[str, np.ndarray]  # query var -> candidate node mask
+    sweeps: int
+    engine: str  # fixpoint engine(s) used
+    template_keys: tuple[str, ...]
+    cache_hit: bool  # every plan this request needed was cached
+    batch: int  # microbatch bucket the request rode in
+    timings: dict[str, float]  # per-stage seconds
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    requests: int
+    microbatches: int  # == fixpoint solves: one disjoint-union solve each
+    engine_counts: dict[str, int]
+    cache: CacheStats
+    stage_seconds: dict[str, float]
+
+    @property
+    def plan_builds(self) -> int:
+        # every cache miss builds exactly one plan; single source of truth
+        return self.cache.misses
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Content hash binding cached plans to one database state."""
+    h = hashlib.blake2b(digest_size=12)
+    h.update(np.ascontiguousarray(g.triples).tobytes())
+    h.update(f"{g.n_nodes}/{g.n_labels}".encode())
+    return h.hexdigest()
+
+
+class Engine:
+    """Facade over template → plan-cache → microbatch → fixpoint → prune."""
+
+    def __init__(
+        self,
+        db: Graph,
+        *,
+        engine: str = "auto",
+        cache_capacity: int = 64,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        backend: str | None = None,
+    ):
+        self.db = db
+        self.engine_pref = engine
+        self.buckets = tuple(sorted(buckets))
+        self.backend = backend
+        self.cache = PlanCache(cache_capacity)
+        # (engine, mats) -> device adjacency, shared across plans; bounded so
+        # a churning template mix cannot pin unbounded device memory
+        self._adj_cache = BoundedDict(capacity=16)
+        self.fingerprint = graph_fingerprint(db)
+        self._node_index = (
+            {n: i for i, n in enumerate(db.node_names)}
+            if db.node_names is not None
+            else {}
+        )
+        self._requests = 0
+        self._microbatches = 0
+        self._engine_counts: dict[str, int] = {}
+        self._stage_seconds: dict[str, float] = {}
+
+    # ------------------------------------------------------------------ #
+    # plan access
+    # ------------------------------------------------------------------ #
+    def plan_for(
+        self, instance_or_template, bucket: int = 1
+    ) -> tuple[CompiledPlan, bool]:
+        """Fetch (or build) the plan for a template at one batch bucket.
+
+        Returns ``(plan, cache_hit)``.
+        """
+        template = (
+            instance_or_template.template
+            if isinstance(instance_or_template, TemplateInstance)
+            else instance_or_template
+        )
+        key = (template.key, self.fingerprint, bucket, self.engine_pref)
+        hit = key in self.cache
+        plan = self.cache.get_or_build(
+            key,
+            lambda: CompiledPlan(
+                template,
+                self.db,
+                engine=self.engine_pref,
+                batch=bucket,
+                node_index=self._node_index,
+                backend=self.backend,
+                adj_cache=self._adj_cache,
+            ),
+        )
+        return plan, hit
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def execute(self, query: str | Query) -> ExecResult:
+        """Run one query end-to-end (parse → plans → solve → prune)."""
+        t0 = time.perf_counter()
+        q, t_parse = self._parse(query)
+        parts = sparql.union_split(q)
+        partials = []
+        for part in parts:
+            inst = canonicalize(part)
+            partials.append(self._solve_microbatch([(0, inst)])[0][1])
+        res = _merge_union(partials, self.db)
+        res.timings["parse"] = t_parse
+        res.timings["total"] = time.perf_counter() - t0
+        self._requests += 1
+        self._bump_stage("parse", t_parse)
+        return res
+
+    def execute_many(self, queries: Sequence[str | Query]) -> list[ExecResult]:
+        """Run a request list, microbatching same-template requests."""
+        results: list[ExecResult | None] = [None] * len(queries)
+        batcher = MicroBatcher(self.buckets)
+        multipart: list[tuple[int, Query]] = []
+        for idx, query in enumerate(queries):
+            q, t_parse = self._parse(query)
+            self._bump_stage("parse", t_parse)
+            parts = sparql.union_split(q)
+            if len(parts) == 1:
+                batcher.add(idx, canonicalize(parts[0]))
+            else:
+                # UNION requests need cross-part merging; run them unbatched
+                multipart.append((idx, q))
+        for mb in batcher.drain():
+            t_mb = time.perf_counter()
+            solved = self._solve_microbatch(mb.requests, bucket=mb.bucket)
+            dt = time.perf_counter() - t_mb
+            for idx, res in solved:
+                res.timings["total"] = dt  # this microbatch only
+                results[idx] = res
+        for idx, q in multipart:
+            results[idx] = self.execute(q)
+        self._requests += len(queries) - len(multipart)  # execute() counted the rest
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------ #
+    def _parse(self, query: str | Query) -> tuple[Query, float]:
+        t = time.perf_counter()
+        q = sparql.parse(query) if isinstance(query, str) else query
+        return q, time.perf_counter() - t
+
+    def _solve_microbatch(
+        self,
+        requests: list[tuple[int, TemplateInstance]],
+        bucket: int | None = None,
+    ) -> list[tuple[int, ExecResult]]:
+        """Solve same-template requests as one padded disjoint-union batch."""
+        # requests with identical constants share one instance slot
+        by_consts: dict[tuple[str, ...], list[tuple[int, TemplateInstance]]] = {}
+        for idx, inst in requests:
+            by_consts.setdefault(inst.constants, []).append((idx, inst))
+        uniq = list(by_consts)
+        if bucket is None:
+            bucket = bucket_for(len(uniq), self.buckets)
+        bindings = uniq + [uniq[-1]] * (bucket - len(uniq))  # pad: repeat last
+
+        t = time.perf_counter()
+        plan, hit = self.plan_for(requests[0][1].template, bucket)
+        t_plan = time.perf_counter() - t
+
+        t = time.perf_counter()
+        chi, sweeps = plan.execute(bindings)
+        t_solve = time.perf_counter() - t
+
+        self._microbatches += 1
+        self._engine_counts[plan.engine] = (
+            self._engine_counts.get(plan.engine, 0) + 1
+        )
+        self._bump_stage("plan", t_plan)
+        self._bump_stage("solve", t_solve)
+
+        out: list[tuple[int, ExecResult]] = []
+        for i, consts in enumerate(uniq):
+            t = time.perf_counter()
+            chi_i = chi[plan.layout.chi_slice(i)]
+            mask, stats = pruning.prune_triples(plan.base_soi, chi_i, self.db)
+            canon_rows = soi_mod.collect(plan.base_soi, chi_i)
+            t_prune = time.perf_counter() - t
+            self._bump_stage("prune", t_prune)
+            for idx, inst in by_consts[consts]:
+                out.append(
+                    (
+                        idx,
+                        ExecResult(
+                            survivors=mask,
+                            stats=stats,
+                            bindings=inst.rename_bindings(canon_rows),
+                            sweeps=sweeps,
+                            engine=plan.engine,
+                            template_keys=(plan.template.key,),
+                            cache_hit=hit,
+                            batch=bucket,
+                            timings={
+                                "plan": t_plan,
+                                "solve": t_solve,
+                                "prune": t_prune,
+                            },
+                        ),
+                    )
+                )
+        return out
+
+    def _bump_stage(self, stage: str, seconds: float) -> None:
+        self._stage_seconds[stage] = self._stage_seconds.get(stage, 0.0) + seconds
+
+    # ------------------------------------------------------------------ #
+    def metrics(self) -> EngineMetrics:
+        return EngineMetrics(
+            requests=self._requests,
+            microbatches=self._microbatches,
+            engine_counts=dict(self._engine_counts),
+            cache=self.cache.stats(),
+            stage_seconds=dict(self._stage_seconds),
+        )
+
+
+def _merge_union(partials: list[ExecResult], db: Graph) -> ExecResult:
+    """Union the per-part results of a UNION query (single part: identity)."""
+    if len(partials) == 1:
+        return partials[0]
+    mask = np.zeros(db.n_edges, dtype=bool)
+    bindings: dict[str, np.ndarray] = {}
+    per_edge: list[int] = []
+    sweeps = 0
+    timings: dict[str, float] = {}
+    for p in partials:
+        mask |= p.survivors
+        sweeps += p.sweeps
+        per_edge += p.stats.per_edge_survivors
+        for var, row in p.bindings.items():
+            bindings[var] = bindings.get(var, np.zeros(db.n_nodes, bool)) | row
+        for k, v in p.timings.items():
+            timings[k] = timings.get(k, 0.0) + v
+    n_after = int(mask.sum())
+    stats = pruning.PruneStats(
+        n_triples=db.n_edges,
+        n_after=n_after,
+        fraction_pruned=1.0 - n_after / max(db.n_edges, 1),
+        per_edge_survivors=per_edge,
+    )
+    return ExecResult(
+        survivors=mask,
+        stats=stats,
+        bindings=bindings,
+        sweeps=sweeps,
+        engine=",".join(sorted({p.engine for p in partials})),
+        template_keys=tuple(k for p in partials for k in p.template_keys),
+        cache_hit=all(p.cache_hit for p in partials),
+        batch=max(p.batch for p in partials),
+        timings=timings,
+    )

@@ -1,0 +1,190 @@
+"""Compiled, constant-rebindable execution plans (DESIGN.md 5.2).
+
+A :class:`CompiledPlan` is everything about a query that does not depend on
+the constants: the (batched) SOI built from the template, its compilation
+against one graph's label table, the engine-specific device operands with
+static shapes, and a jitted fixpoint.  The per-request constants enter as an
+*input* — a ``bool[K, n]`` stack of one-hot rows scattered into the Eq.-13
+init inside the traced function — so rebinding a template to new constants
+re-runs the same trace: zero SOI recompilation, zero jit retraces.
+
+Slot handling: the template SOI marks constants as ``$slot{k}`` (see
+:mod:`repro.engine.template`).  For compilation we strip those markers so
+:func:`repro.core.soi.compile_soi` gives slot rows the full structural
+(Eq.-13 summary) init of a variable; binding then ANDs in the one-hot row,
+which reproduces exactly what ``compile_soi`` does for a literal constant
+(singleton intersected with the summaries; all-zero when the constant is not
+in the database).  One slot may map to *several* internal variables — the
+SOI builder gives constants a private singleton variable per BGP — so the
+scatter index list carries one entry per (instance, slot variable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dualsim, soi as soi_mod
+from repro.core.graph import Graph
+
+from . import cost as cost_mod
+from .batcher import BatchLayout, batch_layout
+from .template import QueryTemplate, slot_index
+
+
+@dataclasses.dataclass
+class PlanMetrics:
+    """Observable counters for the zero-recompile acceptance test."""
+
+    traces: int = 0  # times the jitted fixpoint was (re)traced
+    executions: int = 0  # times it was called
+    build_seconds: float = 0.0  # host-side SOI build + compile + operands
+
+
+class CompiledPlan:
+    """One (template, graph, bucket) entry of the plan cache."""
+
+    def __init__(
+        self,
+        template: QueryTemplate,
+        db: Graph,
+        *,
+        engine: str = "auto",
+        batch: int = 1,
+        node_index: dict[str, int] | None = None,
+        backend: str | None = None,
+        adj_cache: dict | None = None,
+    ):
+        t0 = time.perf_counter()
+        backend = backend or jax.default_backend()
+        self.template = template
+        self.batch = batch
+        self.n_nodes = db.n_nodes
+        if node_index is None:
+            node_index = (
+                {n: i for i, n in enumerate(db.node_names)}
+                if db.node_names is not None
+                else {}
+            )
+        self._node_index = node_index
+
+        base = soi_mod.build_soi(template.query)
+        self.base_soi = base
+        self.layout: BatchLayout = batch_layout([base] * batch)
+        union = self.layout.soi
+
+        # strip slot markers so compile_soi inits slot rows like variables
+        stripped = dataclasses.replace(
+            union,
+            is_const=[
+                None if (c is not None and slot_index(c) is not None) else c
+                for c in union.is_const
+            ],
+        )
+        self.csoi = soi_mod.compile_soi(stripped, db)
+
+        # (instance, slot variable) scatter order; row j of const_rows lands
+        # in init row scatter_ids[j] and carries constants[slot_of[j]]
+        per_part = [
+            (vid, slot_index(c))
+            for vid, c in enumerate(base.is_const)
+            if c is not None and slot_index(c) is not None
+        ]
+        self._scatter_ids = np.asarray(
+            [
+                self.layout.offsets[i] + vid
+                for i in range(batch)
+                for vid, _ in per_part
+            ],
+            dtype=np.int32,
+        )
+        self._scatter_slot = [k for _ in range(batch) for _, k in per_part]
+        self._scatter_instance = [
+            i for i in range(batch) for _ in per_part
+        ]
+
+        self.cost: cost_mod.CostEstimate | None = None
+        if engine == "auto":
+            self.cost = cost_mod.choose_engine(db, self.csoi, backend=backend)
+            engine = self.cost.engine
+        self.engine = engine
+
+        if engine == "dense":
+            self.operands = dualsim.make_dense_operands(self.csoi, db, adj_cache)
+            solver = dualsim.solve_dense
+        elif engine == "packed":
+            self.operands = dualsim.make_packed_operands(self.csoi, db, adj_cache)
+            # compiled Pallas kernel on accelerators; interpret only on CPU
+            # (the cost model prices the two regimes very differently)
+            solver = functools.partial(
+                dualsim.solve_packed, interpret=(backend == "cpu")
+            )
+        elif engine == "sparse":
+            self.operands = dualsim.make_sparse_operands(self.csoi, db, adj_cache)
+            solver = dualsim.solve_sparse
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+
+        self.metrics = PlanMetrics()
+        scatter = jnp.asarray(self._scatter_ids)
+
+        def _run(ops: dualsim.Operands, const_rows: jax.Array):
+            # executes at trace time only: the counter observes retraces
+            self.metrics.traces += 1
+            init = ops.init
+            if const_rows.shape[0]:
+                init = init.at[scatter].set(init[scatter] & const_rows)
+            return solver(dataclasses.replace(ops, init=init))
+
+        self._run = jax.jit(_run)
+        self.metrics.build_seconds = time.perf_counter() - t0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_slot_rows(self) -> int:
+        return len(self._scatter_ids)
+
+    def const_rows(self, bindings: Sequence[tuple[str, ...]]) -> np.ndarray:
+        """One-hot ``bool[K, n]`` rows for a batch of constant tuples.
+
+        ``bindings[i]`` is instance i's slot->constant assignment; a constant
+        missing from the database yields an all-zero row (forces that
+        instance's component empty, same as ``compile_soi``).
+        """
+        if len(bindings) != self.batch:
+            raise ValueError(
+                f"plan is compiled for batch={self.batch}, "
+                f"got {len(bindings)} binding tuples"
+            )
+        rows = np.zeros((self.n_slot_rows, self.n_nodes), dtype=bool)
+        for j, (i, k) in enumerate(
+            zip(self._scatter_instance, self._scatter_slot)
+        ):
+            if k >= len(bindings[i]):
+                raise ValueError(
+                    f"instance {i} binds {len(bindings[i])} constants, "
+                    f"template needs {self.template.n_slots}"
+                )
+            node = self._node_index.get(bindings[i][k])
+            if node is not None:
+                rows[j, node] = True
+        return rows
+
+    def execute(
+        self, bindings: Sequence[tuple[str, ...]]
+    ) -> tuple[np.ndarray, int]:
+        """Solve the fixpoint for one batch of constant tuples.
+
+        Returns ``(chi, sweeps)`` with ``chi`` of shape
+        ``[batch * n_vars, n_nodes]``; use ``self.layout.chi_slice(i)`` to
+        demux instance i.
+        """
+        rows = jnp.asarray(self.const_rows(bindings))
+        chi, sweeps = self._run(self.operands, rows)
+        self.metrics.executions += 1
+        return np.asarray(chi), int(sweeps)

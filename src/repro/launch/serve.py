@@ -1,10 +1,11 @@
-"""Batched dual-simulation query serving driver.
+"""Batched dual-simulation query serving driver — now on `repro.engine`.
 
-Serves a stream of constant-parameterized query-template instances: each
-batch of Q instances is compiled as ONE disjoint-union SOI (variables get
-per-instance copies, Eq.-13 inits carry the per-instance constants) and
-solved in a single fixpoint — the production pattern for "same query, many
-constants" workloads (DESIGN.md Sect. 4; the batch16_sparse dry-run cell).
+Serves a stream of constant-parameterized query-template instances through
+the :class:`repro.engine.Engine` facade: the query shape is compiled ONCE
+into a cached plan (per microbatch bucket), every subsequent request rebinds
+constants as jitted-fixpoint *inputs* (zero recompiles, zero retraces), and
+each batch of instances is solved as one disjoint-union SOI
+(DESIGN.md Sect. 5; the batch16_sparse dry-run cell).
 
     PYTHONPATH=src python -m repro.launch.serve --batch 8 --requests 32
 """
@@ -15,63 +16,57 @@ import time
 
 import numpy as np
 
-from repro.core import dualsim, pruning, soi, sparql
 from repro.data import synth
-
-
-def batched_soi(parts: list[soi.SOI]) -> soi.SOI:
-    """Disjoint union of per-request SOIs (no shared variables)."""
-    base, is_const, edge, copy, pe = [], [], [], [], []
-    for s in parts:
-        off = len(base)
-        base += [f"{b}#{len(base)}" for b in s.base]  # keep instances apart
-        is_const += s.is_const
-        edge += [(l + off, r + off, a, d) for (l, r, a, d) in s.edge_ineqs]
-        copy += [(l + off, r + off) for (l, r) in s.copy_ineqs]
-        pe += [(v + off, a, w + off) for (v, a, w) in s.pattern_edges]
-    return soi.SOI(
-        base=base, is_const=is_const, edge_ineqs=edge, copy_ineqs=copy,
-        pattern_edges=pe, external_mand={}, external_opt={},
-    )
+from repro.engine import Engine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--engine", default="sparse",
-                    choices=["sparse", "dense", "packed"])
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "sparse", "dense", "packed"],
+                    help="fixpoint engine; 'auto' = cost-based selection")
     args = ap.parse_args()
 
     db = synth.lubm_like(n_universities=8, seed=0)
     print(f"database: {db.n_edges} triples / {db.n_nodes} nodes")
 
+    eng = Engine(db, engine=args.engine)
+
     # query template: department members of a given university (?u = const)
     unis = [n for n in db.node_names if n.startswith("Univ")]
     rng = np.random.default_rng(0)
-    requests = [unis[rng.integers(len(unis))] for _ in range(args.requests)]
+    requests = [
+        f"{{ ?d subOrganizationOf {unis[rng.integers(len(unis))]} . "
+        f"?s memberOf ?d }}"
+        for _ in range(args.requests)
+    ]
 
     served = 0
     t_all = time.perf_counter()
     while served < len(requests):
         chunk = requests[served : served + args.batch]
-        parts = [
-            soi.build_soi(sparql.parse(
-                f"{{ ?d subOrganizationOf {u} . ?s memberOf ?d }}"))
-            for u in chunk
-        ]
-        union = batched_soi(parts)
-        c = soi.compile_soi(union, db)
         t0 = time.perf_counter()
-        chi, sweeps = dualsim.solve_compiled(c, db, engine=args.engine)
+        results = eng.execute_many(chunk)
         dt = time.perf_counter() - t0
-        _, stats = pruning.prune_triples(union, chi, db)
-        print(f"batch of {len(chunk)}: {sweeps} sweeps, {dt*1e3:.1f} ms, "
-              f"{stats.n_after}/{stats.n_triples} triples survive")
+        r = results[0]
+        print(
+            f"batch of {len(chunk)}: {r.sweeps} sweeps, {dt*1e3:.1f} ms, "
+            f"engine={r.engine}, "
+            + ", ".join(f"{x.stats.n_after}/{x.stats.n_triples}" for x in results[:4])
+            + (" ... triples survive" if len(results) > 4 else " triples survive")
+        )
         served += len(chunk)
     total = time.perf_counter() - t_all
-    print(f"served {served} requests in {total:.2f}s "
-          f"({served/total:.1f} req/s incl. SOI build+compile)")
+
+    m = eng.metrics()
+    print(
+        f"served {served} requests in {total:.2f}s ({served/total:.1f} req/s); "
+        f"plan cache: {m.cache.hits} hits / {m.cache.misses} misses "
+        f"({m.cache.hit_rate:.0%}), {m.plan_builds} plans built, "
+        f"engines={m.engine_counts}"
+    )
 
 
 if __name__ == "__main__":

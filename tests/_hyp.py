@@ -1,0 +1,47 @@
+"""Optional-hypothesis shim (see pyproject.toml ``[test]`` extra).
+
+``from tests._hyp import given, settings, st`` gives the real hypothesis API
+when the package is installed.  When it is missing, property tests degrade
+to per-test skips (the ``@given`` stub swallows the strategy arguments and
+replaces the test with a zero-arg skipper) instead of killing the whole
+module at collection — plain tests in the same file keep running.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade: property tests skip, plain tests run
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``strategies``: every attribute/call/| yields self,
+        so module-level strategy-building expressions still evaluate."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def __or__(self, other):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            def _skipped():
+                pytest.skip("hypothesis not installed (property test)")
+
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+
+        return deco

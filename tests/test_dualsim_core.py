@@ -2,7 +2,7 @@
 (paper Def. 2 / Prop. 1/2), plus the paper's worked examples."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core import dualsim, soi
 from repro.core.graph import Graph

@@ -1,0 +1,275 @@
+"""`repro.engine` subsystem: template canonicalization, plan-cache behavior,
+cost-model engine choice, microbatch demux, and end-to-end equivalence of
+``Engine.execute`` with the direct solve_compiled + prune_triples path.
+
+The zero-recompile acceptance criterion is asserted here via cache and
+trace counters: a warm constant-rebound execute must not build a plan
+(cache.misses unchanged = no SOI recompilation) and must not retrace the
+jitted fixpoint (plan.metrics.traces unchanged)."""
+import numpy as np
+import pytest
+
+from repro.core import dualsim, pruning, soi, sparql
+from repro.data import synth
+from repro.engine import (
+    Engine,
+    MicroBatcher,
+    PlanCache,
+    batch_layout,
+    batched_soi,
+    bucket_for,
+    canonicalize,
+    choose_engine,
+)
+
+from tests._hyp import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def lubm():
+    return synth.lubm_like(n_universities=3, seed=0)
+
+
+# --------------------------------------------------------------------- #
+# template canonicalization
+# --------------------------------------------------------------------- #
+def test_same_shape_different_constants_share_key():
+    a = canonicalize(sparql.parse("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }"))
+    b = canonicalize(sparql.parse("{ ?x subOrganizationOf Univ2 . ?y memberOf ?x }"))
+    assert a.template.key == b.template.key
+    assert a.constants == ("Univ0",) and b.constants == ("Univ2",)
+    assert a.var_names == ("d", "s") and b.var_names == ("x", "y")
+
+
+def test_different_shapes_differ():
+    a = canonicalize(sparql.parse("{ ?a p0 ?b }"))
+    b = canonicalize(sparql.parse("{ ?a p1 ?b }"))  # label is part of the shape
+    c = canonicalize(sparql.parse("{ ?a p0 ?b . ?b p0 ?c }"))
+    assert len({a.template.key, b.template.key, c.template.key}) == 3
+
+
+def test_repeated_constant_is_one_slot():
+    # same constant twice expresses an equality two distinct constants don't
+    a = canonicalize(sparql.parse("{ ?a p0 C . ?b p1 C }"))
+    b = canonicalize(sparql.parse("{ ?a p0 C . ?b p1 D }"))
+    assert a.template.n_slots == 1 and b.template.n_slots == 2
+    assert a.template.key != b.template.key
+
+
+def test_operator_structure_in_key():
+    a = canonicalize(sparql.parse("{ ?a p0 ?b } AND { ?b p1 ?c }"))
+    b = canonicalize(sparql.parse("{ ?a p0 ?b } OPTIONAL { ?b p1 ?c }"))
+    assert a.template.key != b.template.key
+
+
+# --------------------------------------------------------------------- #
+# plan cache
+# --------------------------------------------------------------------- #
+def test_plan_cache_hit_miss_eviction():
+    cache = PlanCache(capacity=2)
+    built = []
+    for key in ["a", "b", "a", "c", "b"]:  # c evicts b (LRU), then b rebuilds
+        cache.get_or_build(key, lambda k=key: built.append(k))
+    assert cache.hits == 1 and cache.misses == 4 and cache.evictions == 2
+    assert built == ["a", "b", "c", "b"]
+    s = cache.stats()
+    assert s.size == 2 and s.hit_rate == pytest.approx(0.2)
+
+
+# --------------------------------------------------------------------- #
+# cost model
+# --------------------------------------------------------------------- #
+def _compiled(q, g):
+    return soi.compile_soi(soi.build_soi(sparql.parse(q)), g)
+
+
+def test_cost_model_dense_on_small_dense_graph():
+    g = synth.random_graph(n_nodes=48, n_labels=2, n_edges=1500, seed=0)
+    est = choose_engine(g, _compiled("{ ?a p0 ?b . ?b p1 ?c }", g))
+    assert est.engine == "dense"
+    assert est.costs["dense"] < est.costs["sparse"]
+
+
+def test_cost_model_sparse_on_large_sparse_graph():
+    g = synth.random_graph(n_nodes=20_000, n_labels=4, n_edges=40_000, seed=0)
+    est = choose_engine(g, _compiled("{ ?a p0 ?b . ?b p1 ?c }", g))
+    assert est.engine == "sparse"
+
+
+def test_cost_model_dense_infeasible_at_scale():
+    # 60k nodes: stacked bool[M, n, n] blows the dense memory budget
+    g = synth.random_graph(n_nodes=60_000, n_labels=2, n_edges=50_000, seed=0)
+    est = choose_engine(g, _compiled("{ ?a p0 ?b }", g))
+    assert est.costs["dense"] == float("inf")
+    assert est.engine == "sparse"
+
+
+# --------------------------------------------------------------------- #
+# batcher
+# --------------------------------------------------------------------- #
+def test_bucket_for():
+    assert [bucket_for(n) for n in (1, 2, 3, 5, 16, 99)] == [1, 2, 4, 8, 16, 16]
+
+
+def test_batched_soi_instance_boundaries():
+    s = soi.build_soi(sparql.parse("{ ?a p0 ?b . ?b p1 ?c }"))
+    layout = batch_layout([s, s, s])
+    assert layout.offsets == [0, s.n_vars, 2 * s.n_vars]
+    # per-instance renaming: instance i's variables carry suffix "#i"
+    union = layout.soi
+    for i in range(3):
+        sl = layout.chi_slice(i)
+        assert all(b.endswith(f"#{i}") for b in union.base[sl])
+    assert union.n_vars == 3 * s.n_vars
+    assert len(union.edge_ineqs) == 3 * len(s.edge_ineqs)
+    # back-compat wrapper returns the same union
+    assert batched_soi([s, s, s]).base == union.base
+
+
+def test_microbatcher_groups_by_template():
+    mb = MicroBatcher(buckets=(1, 2, 4))
+    q_a = ["{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }",
+           "{ ?x subOrganizationOf Univ1 . ?y memberOf ?x }",
+           "{ ?d subOrganizationOf Univ2 . ?s memberOf ?d }"]
+    q_b = ["{ ?p publicationAuthor ?s }"]
+    for i, q in enumerate(q_a + q_b):
+        mb.add(i, canonicalize(sparql.parse(q)))
+    groups = list(mb.drain())
+    assert len(mb) == 0
+    sizes = sorted(len(g.requests) for g in groups)
+    assert sizes == [1, 3]
+    big = next(g for g in groups if len(g.requests) == 3)
+    assert big.bucket == 4  # 3 requests pad up to the 4-bucket
+
+
+# --------------------------------------------------------------------- #
+# warm path: zero recompiles, zero retraces (acceptance criterion)
+# --------------------------------------------------------------------- #
+def test_warm_rebind_no_recompile_no_retrace(lubm):
+    eng = Engine(lubm)
+    r0 = eng.execute("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }")
+    assert not r0.cache_hit
+    builds_after_cold = eng.cache.misses
+    plan, _ = eng.plan_for(
+        canonicalize(sparql.parse("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }"))
+    )
+    traces_after_cold = plan.metrics.traces
+    assert traces_after_cold == 1
+
+    for uni in ["Univ1", "Univ2", "Univ0"]:
+        r = eng.execute(f"{{ ?q subOrganizationOf {uni} . ?m memberOf ?q }}")
+        assert r.cache_hit
+    # zero SOI recompilation (no plan builds) and zero jit retraces
+    assert eng.cache.misses == builds_after_cold
+    assert plan.metrics.traces == traces_after_cold
+    assert plan.metrics.executions == 4
+
+
+def test_adjacency_shared_across_plans(lubm):
+    # adjacency depends only on (engine, mats, graph): plans for different
+    # batch buckets of one template must share the device arrays
+    eng = Engine(lubm, engine="dense")
+    qs = [
+        f"{{ ?d subOrganizationOf {u} . ?s memberOf ?d }}"
+        for u in ("Univ0", "Univ1")
+    ]
+    eng.execute(qs[0])  # bucket-1 plan
+    eng.execute_many(qs)  # bucket-2 plan, same template
+    inst = canonicalize(sparql.parse(qs[0]))
+    p1, _ = eng.plan_for(inst, bucket=1)
+    p2, _ = eng.plan_for(inst, bucket=2)
+    assert p1 is not p2
+    assert p1.operands.adj_dense is p2.operands.adj_dense
+
+
+def test_results_differ_across_constants(lubm):
+    eng = Engine(lubm)
+    rows = [
+        eng.execute(f"{{ ?d subOrganizationOf {u} . ?s memberOf ?d }}")
+        for u in ("Univ0", "Univ1")
+    ]
+    assert not np.array_equal(rows[0].survivors, rows[1].survivors)
+    # each answer only keeps the requested university's component
+    assert rows[0].bindings["d"].sum() > 0
+    assert not np.any(rows[0].bindings["d"] & rows[1].bindings["d"])
+
+
+def test_unknown_constant_gives_empty_result(lubm):
+    eng = Engine(lubm)
+    r = eng.execute("{ ?d subOrganizationOf UnivNoSuch . ?s memberOf ?d }")
+    assert r.stats.n_after == 0 and not r.survivors.any()
+
+
+# --------------------------------------------------------------------- #
+# end-to-end equivalence with the direct pipeline
+# --------------------------------------------------------------------- #
+def _direct_mask(q, g, engine="dense"):
+    mask = np.zeros(g.n_edges, dtype=bool)
+    for part in sparql.union_split(q):
+        s = soi.build_soi(part)
+        c = soi.compile_soi(s, g)
+        chi, _ = dualsim.solve_compiled(c, g, engine=engine)
+        m, _ = pruning.prune_triples(s, chi, g)
+        mask |= m
+    return mask
+
+
+E2E_QUERIES = [
+    "{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }",
+    "{ ?x memberOf ?y . ?y subOrganizationOf ?z . ?x undergraduateDegreeFrom ?z }",
+    "{ ?s memberOf ?d } OPTIONAL { ?s advisor ?a }",
+    "{ ?d subOrganizationOf Univ0 } UNION { ?d subOrganizationOf Univ1 }",
+    "{ ?p publicationAuthor ?s . ?s memberOf ?d } AND { ?d subOrganizationOf Univ2 }",
+]
+
+
+@pytest.mark.parametrize("qt", E2E_QUERIES)
+def test_engine_matches_direct_path(lubm, qt):
+    eng = Engine(lubm)
+    res = eng.execute(qt)
+    assert np.array_equal(res.survivors, _direct_mask(sparql.parse(qt), lubm))
+    assert res.stats.n_after == int(res.survivors.sum())
+
+
+@pytest.mark.parametrize("engine", ["dense", "sparse", "packed"])
+def test_engine_override_same_fixpoint(lubm, engine):
+    qt = "{ ?d subOrganizationOf Univ1 . ?s memberOf ?d }"
+    res = Engine(lubm, engine=engine).execute(qt)
+    assert res.engine == engine
+    assert np.array_equal(res.survivors, _direct_mask(sparql.parse(qt), lubm))
+
+
+def test_execute_many_matches_execute(lubm):
+    reqs = [
+        f"{{ ?d subOrganizationOf {u} . ?s memberOf ?d }}"
+        for u in ("Univ0", "Univ1", "Univ2", "Univ0", "Univ1")
+    ] + ["{ ?d subOrganizationOf Univ0 } UNION { ?d subOrganizationOf Univ1 }"]
+    eng = Engine(lubm)
+    batched = eng.execute_many(reqs)
+    singles = [Engine(lubm).execute(q) for q in reqs]
+    for b, s, q in zip(batched, singles, reqs):
+        assert np.array_equal(b.survivors, s.survivors), q
+        assert b.sweeps > 0
+    # the five same-template requests rode one microbatch (3 unique -> bucket 4)
+    assert batched[0].batch == 4
+    m = eng.metrics()
+    assert m.requests == len(reqs)
+    assert m.microbatches >= 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_engine_matches_direct_path_property(seed):
+    """Engine.execute survivors == direct solve_compiled + prune_triples on
+    random constant-parameterized queries over lubm_like data."""
+    g = synth.lubm_like(n_universities=2, seed=1)
+    rng = np.random.default_rng(seed)
+    unis = [n for n in g.node_names if n.startswith("Univ")]
+    u = unis[rng.integers(len(unis))]
+    qt = (
+        f"{{ ?d subOrganizationOf {u} . ?s memberOf ?d . ?s advisor ?a }}"
+        if rng.random() < 0.5
+        else f"{{ ?s undergraduateDegreeFrom {u} }} OPTIONAL {{ ?p publicationAuthor ?s }}"
+    )
+    res = Engine(g).execute(qt)
+    assert np.array_equal(res.survivors, _direct_mask(sparql.parse(qt), g))

@@ -1,7 +1,7 @@
 """Pruning invariants (paper Sect. 5 / Tables 3-5): dual-simulation pruning
 never changes any query's result set."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core import dualsim, join, pruning, soi, sparql
 from repro.data import synth

@@ -2,7 +2,7 @@
 renaming (Lemmas 4/5 + the Sect. 4.4 'syntactically closest' rule), and the
 soundness theorem (Thm. 2) as a property test against the join evaluator."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core import dualsim, join, soi, sparql
 from repro.core.sparql import And, BGP, Optional_, Union_, parse

@@ -69,8 +69,8 @@ def test_engines_agree_end_to_end(lubm):
 
 
 def test_batched_serving_matches_individual(lubm):
-    """launch/serve.py's disjoint-union batching == per-query solving."""
-    from repro.launch.serve import batched_soi
+    """engine/batcher.py's disjoint-union batching == per-query solving."""
+    from repro.engine.batcher import batched_soi
 
     queries = [
         sparql.parse(f"{{ ?d subOrganizationOf Univ{i} . ?s memberOf ?d }}")
