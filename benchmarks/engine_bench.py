@@ -1,20 +1,24 @@
-"""Engine-subsystem benchmark: cold vs warm plan-cache latency and
-microbatched throughput (issue acceptance: warm-path latency of a
-constant-rebound template >= 5x lower than the cold path).
+"""Engine-subsystem benchmark on the `repro.db` API: cold vs warm
+plan-cache latency, session throughput, and invalidation cost (issue
+acceptance: warm-path latency of a constant-rebound template >= 5x lower
+than the cold path).
 
     PYTHONPATH=src python -m benchmarks.engine_bench
     PYTHONPATH=src python benchmarks/engine_bench.py --universities 8
+    PYTHONPATH=src python benchmarks/engine_bench.py --tiny   # CI smoke
 
-Two sections, printed as ``name,us_per_call,derived`` CSV lines (scaffold
+Sections, printed as ``name,us_per_call,derived`` CSV lines (scaffold
 contract of benchmarks/run.py) and written to results/bench/engine.json:
 
 * ``cold_warm`` — first execution of a template (parse + SOI build/compile +
   operand upload + jit trace) vs repeated executions that only rebind
   constants (cache hit, zero retraces).  The ratio is the whole point of the
   plan cache: serving latency is the fixpoint, not compilation.
-* ``throughput`` — requests/second through ``Engine.execute_many`` at
-  several microbatch sizes over the LUBM-like "same template, many
-  constants" workload.
+* ``throughput`` — requests/second through deadline-batched sessions at
+  several bucket caps over the LUBM-like "same template, many constants"
+  workload.
+* ``invalidation`` — latency of the first query after an insert (plan
+  rebuild) vs a warm query, the price of a version bump.
 """
 from __future__ import annotations
 
@@ -26,13 +30,13 @@ import time
 import numpy as np
 
 from repro.data import synth
-from repro.engine import Engine
+from repro.db import GraphDB
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 
-def _mk_requests(db, n: int, seed: int = 0) -> list[str]:
-    unis = [x for x in db.node_names if x.startswith("Univ")]
+def _mk_requests(db: GraphDB, n: int, seed: int = 0) -> list[str]:
+    unis = [x for x in db.graph.node_names if x.startswith("Univ")]
     rng = np.random.default_rng(seed)
     return [
         f"{{ ?d subOrganizationOf {unis[rng.integers(len(unis))]} . "
@@ -41,24 +45,24 @@ def _mk_requests(db, n: int, seed: int = 0) -> list[str]:
     ]
 
 
-def cold_warm(db, *, engine: str = "auto", warm_iters: int = 20) -> dict:
-    """Cold (first-ever) vs warm (constant-rebound) execute latency."""
-    eng = Engine(db, engine=engine)
+def cold_warm(graph, *, engine: str = "auto", warm_iters: int = 20) -> dict:
+    """Cold (first-ever) vs warm (constant-rebound) query latency."""
+    db = GraphDB(graph, engine=engine)
     reqs = _mk_requests(db, warm_iters + 1)
 
     t0 = time.perf_counter()
-    first = eng.execute(reqs[0])
+    first = db.query(reqs[0])
     t_cold = time.perf_counter() - t0
 
     warm_times = []
     for q in reqs[1:]:
         t0 = time.perf_counter()
-        res = eng.execute(q)
+        res = db.query(q)
         warm_times.append(time.perf_counter() - t0)
         assert res.cache_hit, "warm request missed the plan cache"
     t_warm = float(np.median(warm_times))
 
-    m = eng.metrics()
+    m = db.metrics()
     return {
         "bench": "cold_warm",
         "engine": first.engine,
@@ -68,35 +72,63 @@ def cold_warm(db, *, engine: str = "auto", warm_iters: int = 20) -> dict:
         "plan_builds": m.plan_builds,
         "cache_hits": m.cache.hits,
         "n_nodes": db.n_nodes,
-        "n_triples": db.n_edges,
+        "n_triples": db.n_triples,
     }
 
 
-def throughput(db, *, engine: str = "auto", batch_sizes=(1, 4, 8, 16),
+def throughput(graph, *, engine: str = "auto", batch_sizes=(1, 4, 8, 16),
                n_requests: int = 64) -> list[dict]:
-    """Requests/second through execute_many at several microbatch sizes."""
+    """Requests/second through deadline-batched sessions per bucket cap."""
     rows = []
     for batch in batch_sizes:
-        eng = Engine(db, engine=engine)
+        db = GraphDB(graph, engine=engine)
         reqs = _mk_requests(db, n_requests, seed=batch)
         # warm pass: chunks with fewer unique constants hit smaller buckets,
         # so a full pass is needed to build every (template, bucket) plan
-        for s in range(0, n_requests, batch):
-            eng.execute_many(reqs[s : s + batch])
-        t0 = time.perf_counter()
-        for s in range(0, n_requests, batch):
-            eng.execute_many(reqs[s : s + batch])
+        for pass_no in range(2):
+            if pass_no == 1:
+                t0 = time.perf_counter()
+            with db.session(max_delay_ms=1e6, max_pending=batch) as s:
+                futures = [s.submit(q) for q in reqs]
+                for f in futures:
+                    f.result()
         dt = time.perf_counter() - t0
-        m = eng.metrics()
+        m = db.metrics()
         rows.append({
             "bench": f"throughput_b{batch}",
             "batch": batch,
             "req_per_s": n_requests / dt,
             "t_total": dt,
+            "flushes": s.flushes,
             "engines": m.engine_counts,
             "cache_hit_rate": m.cache.hit_rate,
         })
     return rows
+
+
+def invalidation(graph, *, engine: str = "auto") -> dict:
+    """Warm query vs first query after an insert (stale-plan rebuild)."""
+    db = GraphDB(graph, engine=engine)
+    q = _mk_requests(db, 1)[0]
+    db.query(q)  # cold build
+    t0 = time.perf_counter()
+    db.query(q)
+    t_warm = time.perf_counter() - t0
+
+    db.insert([("DeptBench", "subOrganizationOf", "Univ0"),
+               ("StudentBench", "memberOf", "DeptBench")])
+    t0 = time.perf_counter()
+    db.query(q)
+    t_rebuild = time.perf_counter() - t0
+    m = db.metrics()
+    return {
+        "bench": "invalidation",
+        "t_warm": t_warm,
+        "t_rebuild": t_rebuild,
+        "rebuild_over_warm": t_rebuild / t_warm,
+        "plans_invalidated": m.plan_invalidations,
+        "invalidation_events": m.invalidation_events,
+    }
 
 
 def main() -> None:
@@ -104,13 +136,22 @@ def main() -> None:
     ap.add_argument("--universities", type=int, default=8)
     ap.add_argument("--engine", default="auto")
     ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: small graph, few requests")
     args = ap.parse_args()
+    if args.tiny:
+        args.universities = min(args.universities, 2)
+        args.requests = min(args.requests, 12)
 
-    db = synth.lubm_like(n_universities=args.universities, seed=0)
-    print(f"# database: {db.n_edges} triples / {db.n_nodes} nodes")
+    graph = synth.lubm_like(n_universities=args.universities, seed=0)
+    print(f"# database: {graph.n_edges} triples / {graph.n_nodes} nodes")
 
-    rows = [cold_warm(db, engine=args.engine)]
-    rows += throughput(db, engine=args.engine, n_requests=args.requests)
+    warm_iters = 5 if args.tiny else 20
+    batch_sizes = (1, 4) if args.tiny else (1, 4, 8, 16)
+    rows = [cold_warm(graph, engine=args.engine, warm_iters=warm_iters)]
+    rows += throughput(graph, engine=args.engine, n_requests=args.requests,
+                       batch_sizes=batch_sizes)
+    rows.append(invalidation(graph, engine=args.engine))
 
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "engine.json"), "w") as f:
@@ -119,9 +160,12 @@ def main() -> None:
     cw = rows[0]
     print(f"engine/cold,{cw['t_cold']*1e6:.1f},engine={cw['engine']}")
     print(f"engine/warm,{cw['t_warm']*1e6:.1f},speedup={cw['speedup']:.1f}x")
-    for r in rows[1:]:
+    for r in rows[1:-1]:
         print(f"engine/{r['bench']},{r['t_total']*1e6:.1f},"
               f"req_per_s={r['req_per_s']:.1f}")
+    inv = rows[-1]
+    print(f"engine/invalidation,{inv['t_rebuild']*1e6:.1f},"
+          f"rebuild_over_warm={inv['rebuild_over_warm']:.1f}x")
     ok = cw["speedup"] >= 5.0
     print(f"# warm-path speedup {cw['speedup']:.1f}x "
           f"({'meets' if ok else 'BELOW'} the 5x acceptance bar)")

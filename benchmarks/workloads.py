@@ -2,10 +2,7 @@
 query set mirroring the paper's B/L/D families (Sect. 5.1)."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import sparql
-from repro.core.sparql import Optional_
 from repro.data import synth
 
 

@@ -1,19 +1,70 @@
-"""Batched dual-simulation query serving demo (see launch/serve.py).
+"""`repro.db` public-API tour: GraphDB, fluent builder, sessions, lazy
+result sets, and versioned plan invalidation (DESIGN.md Sect. 6).
 
     PYTHONPATH=src python examples/serve_queries.py
 """
 import os
-import subprocess
 import sys
 
-cmd = [sys.executable, "-m", "repro.launch.serve", "--batch", "4",
-       "--requests", "12", "--engine", "auto"]
-print("+", " ".join(cmd))
-# inherit the full environment (virtualenvs need their own PATH/PYTHONPATH);
-# just make sure the repo's src/ is importable from any cwd.
-env = dict(os.environ)
-src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
-env["PYTHONPATH"] = src + (
-    os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
-)
-subprocess.run(cmd, check=True, env=env)
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:  # allow running from any cwd without PYTHONPATH
+    sys.path.insert(
+        0,
+        os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+        ),
+    )
+
+from repro.data import synth
+from repro.db import GraphDB, Q
+
+
+def main() -> None:
+    db = GraphDB(synth.lubm_like(n_universities=3, seed=0))
+    print(db)
+
+    # fluent builder instead of string formatting; round-trips via parse()
+    members_of = (
+        Q.triple("?d", "subOrganizationOf", "Univ0")
+         .triple("?s", "memberOf", "?d")
+    )
+    print("query:", members_of.sparql())
+
+    rs = db.query(members_of)
+    print(rs)
+    print("  departments:", rs.bindings("d"))
+    print("  first page of survivors:", rs.page(0, 3))
+
+    # sessions batch same-template requests into one fixpoint solve
+    with db.session(max_delay_ms=50, max_pending=8) as session:
+        futures = [
+            session.submit(
+                Q.triple("?d", "subOrganizationOf", f"Univ{i % 3}")
+                 .triple("?s", "memberOf", "?d")
+            )
+            for i in range(8)
+        ]
+        results = [f.result() for f in futures]
+    m = db.metrics()
+    print(
+        f"session: {len(results)} requests in {session.flushes} flush(es), "
+        f"{m.microbatches} fixpoint solves, cache hit rate "
+        f"{m.cache.hit_rate:.0%}"
+    )
+
+    # mutation: version bump -> precise plan invalidation, lazily rebuilt
+    db.insert([("DeptNew", "subOrganizationOf", "Univ0"),
+               ("StudentNew", "memberOf", "DeptNew")])
+    rs2 = db.query(members_of)
+    assert ("StudentNew", "memberOf", "DeptNew") in list(rs2.survivor_triples())
+    m = db.metrics()
+    print(
+        f"after insert (v{db.version}): {len(rs2)} survivors, "
+        f"{m.plan_invalidations} plans invalidated, "
+        f"{m.invalidation_events} invalidation event(s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,4 @@
 """internlm2-1.8b [arXiv:2403.17297; hf]: 24L d=2048 16H GQA(kv=8) ff=8192."""
-import jax.numpy as jnp
 from repro.models.transformer import LMConfig
 from .base import LMArch
 

@@ -14,7 +14,7 @@ are dictionary-encoded to dense ints.  Three physical layouts coexist:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Mapping, Sequence
+from typing import Iterable
 
 import numpy as np
 

@@ -24,13 +24,12 @@ The builder is recursive over the query AST; UNION is split away beforehand
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
 
 import numpy as np
 
 from . import sparql
 from .graph import Graph
-from .sparql import And, BGP, Const, Optional_, Query, Triple, Var
+from .sparql import And, BGP, Const, Optional_, Query, Var
 
 FWD, BWD = 0, 1
 
@@ -247,7 +246,15 @@ class CompiledSOI:
     init: np.ndarray  # (n_vars, n_nodes) bool
 
 
-def compile_soi(soi: SOI, g: Graph) -> CompiledSOI:
+def compile_soi(
+    soi: SOI, g: Graph, node_index: dict[str, int] | None = None
+) -> CompiledSOI:
+    """Lower ``soi`` against ``g``.
+
+    ``node_index`` maps node name -> id; callers that already hold one (the
+    engine does) pass it down so constants resolve in O(1) instead of an
+    O(n_nodes) ``list.index`` scan per constant.  Built on demand otherwise.
+    """
     assert g.label_names is not None or all(
         isinstance(a, int) for (_, _, a, _) in soi.edge_ineqs
     ), "graph must carry label names (or SOI labels must be int ids)"
@@ -275,12 +282,19 @@ def compile_soi(soi: SOI, g: Graph) -> CompiledSOI:
     init[dead] = False
 
     # constants: singleton sets.
+    if node_index is None and any(c is not None for c in soi.is_const):
+        node_index = (
+            {name: i for i, name in enumerate(g.node_names)}
+            if g.node_names is not None
+            else {}
+        )
     for i, c in enumerate(soi.is_const):
         if c is None:
             continue
         row = np.zeros(n, dtype=bool)
-        if g.node_names is not None and c in g.node_names:
-            row[g.node_names.index(c)] = init[i][g.node_names.index(c)]
+        nid = node_index.get(c)
+        if nid is not None:
+            row[nid] = init[i][nid]
         init[i] = row
 
     mats: list[tuple[int, int]] = []

@@ -145,39 +145,66 @@ def union_split(q: Query) -> list[Query]:
 # --------------------------------------------------------------------- #
 _TOKEN = re.compile(
     r"\s*(?:(?P<lbrace>\{)|(?P<rbrace>\})|(?P<dot>\.)"
-    r"|(?P<kw>AND|OPTIONAL|UNION|SELECT|WHERE)"
+    r"|(?P<kw>(?:AND|OPTIONAL|UNION|SELECT|WHERE)\b)"  # \b: ANDERSON is a name
     r"|(?P<var>\?[A-Za-z_][A-Za-z0-9_]*)"
     r"|(?P<name>[A-Za-z0-9_:/#\-\.]+))"
 )
 
 
+def _line_col(text: str, pos: int) -> tuple[int, int]:
+    """1-based (line, column) of character offset ``pos`` in ``text``."""
+    line = text.count("\n", 0, pos) + 1
+    col = pos - (text.rfind("\n", 0, pos) + 1) + 1
+    return line, col
+
+
+def _err(text: str, pos: int, msg: str) -> SyntaxError:
+    line, col = _line_col(text, pos)
+    return SyntaxError(f"{msg} at line {line}, column {col}")
+
+
 def parse(text: str) -> Query:
-    """Parse the small query language described in the module docstring."""
-    toks = []
+    """Parse the small query language described in the module docstring.
+
+    Malformed input raises :class:`SyntaxError` with the 1-based line and
+    column of the offending token; empty groups ``{}`` are rejected (a
+    vacuous ``BGP(())`` matches everything, which is never what a typo
+    meant).
+    """
+    toks: list[tuple[str, str, int]] = []  # (kind, value, char offset)
     pos = 0
-    text = text.strip()
-    while pos < len(text):
+    end = len(text.rstrip())
+    while pos < end:
         m = _TOKEN.match(text, pos)
         if not m:
-            raise SyntaxError(f"bad token at: {text[pos:pos+30]!r}")
+            at = pos + len(text[pos:]) - len(text[pos:].lstrip())
+            raise _err(text, at, f"bad token at {text[at:at+30]!r}")
         pos = m.end()
         kind = m.lastgroup
         val = m.group(kind)
         if kind == "kw" and val in ("SELECT", "WHERE"):
             continue
-        toks.append((kind, val))
+        toks.append((kind, val, m.start(kind)))
+
+    if not toks:
+        raise _err(text, 0, "empty query")
 
     def peek():
-        return toks[0] if toks else (None, None)
+        return toks[0] if toks else (None, None, end)
 
     def pop(expect=None):
-        kind, val = toks.pop(0)
+        if not toks:
+            raise _err(text, end, "unexpected end of query")
+        kind, val, at = toks.pop(0)
         if expect and kind != expect:
-            raise SyntaxError(f"expected {expect}, got {kind} {val!r}")
+            raise _err(text, at, f"expected {expect}, got {kind} {val!r}")
         return kind, val
 
     def parse_group() -> Query:
+        _, _, open_at = toks[0] if toks else (None, None, end)
         pop("lbrace")
+        if peek()[0] == "rbrace":
+            raise _err(text, open_at, "empty group '{}'")
         if peek()[0] == "lbrace":  # nested composite
             q = parse_expr()
             pop("rbrace")
@@ -194,12 +221,14 @@ def parse(text: str) -> Query:
         return BGP(tuple(triples))
 
     def parse_term() -> Term:
-        kind, val = toks.pop(0)
+        if not toks:
+            raise _err(text, end, "unexpected end of query")
+        kind, val, at = toks.pop(0)
         if kind == "var":
             return Var(val[1:])
         if kind == "name":
             return Const(val)
-        raise SyntaxError(f"expected term, got {kind} {val!r}")
+        raise _err(text, at, f"expected term, got {kind} {val!r}")
 
     def parse_expr() -> Query:
         left = parse_group()
@@ -213,8 +242,34 @@ def parse(text: str) -> Query:
 
     q = parse_expr()
     if toks:
-        raise SyntaxError(f"trailing tokens: {toks[:3]}")
+        raise _err(text, toks[0][2], f"trailing tokens: {toks[0][1]!r}")
     return q
+
+
+# --------------------------------------------------------------------- #
+# pretty-printer (inverse of parse)
+# --------------------------------------------------------------------- #
+def format_term(t: Term) -> str:
+    return f"?{t.name}" if isinstance(t, Var) else t.name
+
+
+def format_query(q: Query) -> str:
+    """Serialize a query so that ``parse(format_query(q)) == q``.
+
+    The guarantee holds for ASTs whose constant / predicate names match the
+    parser's ``name`` token class (``[A-Za-z0-9_:/#.-]+``) and whose BGPs are
+    non-empty — i.e. everything the parser or the :mod:`repro.db.builder`
+    can produce.
+    """
+    if isinstance(q, BGP):
+        if not q.triples:
+            raise ValueError("cannot format an empty BGP (parse rejects {})")
+        body = " . ".join(
+            f"{format_term(t.s)} {t.p} {format_term(t.o)}" for t in q.triples
+        )
+        return "{ " + body + " }"
+    op = {And: "AND", Optional_: "OPTIONAL", Union_: "UNION"}[type(q)]
+    return "{ " + f"{format_query(q.left)} {op} {format_query(q.right)}" + " }"
 
 
 def bgp_of_triples(*spo: tuple[str, str, str]) -> BGP:

@@ -8,7 +8,7 @@ step counter in the checkpoint.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator
+from typing import Iterator
 
 import numpy as np
 

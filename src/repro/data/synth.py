@@ -15,7 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.core.sparql import BGP, And, Optional_, Query, Triple, Var, bgp_of_triples
+from repro.core.sparql import Optional_, Query, bgp_of_triples
 
 LUBM_PREDICATES = [
     "type", "memberOf", "subOrganizationOf", "undergraduateDegreeFrom",

@@ -1,0 +1,175 @@
+"""Sessions: deadline/size-batched request admission over the microbatcher
+(DESIGN.md 6.2; ROADMAP "async request queues" seam).
+
+A :class:`Session` turns the engine's list-at-a-time ``execute_many`` into
+a submit/flush surface: ``submit(query)`` returns a :class:`ResultFuture`
+immediately, and pending requests are released to the engine as one
+microbatched flush when the *admission policy* fires:
+
+* **bucket cap** — as soon as any one template accumulates
+  ``max_pending`` requests (default: the engine's largest microbatch
+  bucket), waiting longer cannot improve batching, so the session flushes.
+  N concurrent same-template submits therefore cost at most
+  ``ceil(N / max_bucket)`` fixpoint solves.
+* **deadline** — the first pending submit arms a ``max_delay_ms`` deadline;
+  a submit arriving at or past it flushes everything (the late arrival
+  rides along).  ``max_delay_ms=0`` degenerates to synchronous execution.
+* **explicit** — ``flush()``, ``future.result()`` on an unresolved future,
+  or leaving the ``with`` block.
+
+The API is synchronous-cooperative: deadlines are checked at submit and
+result boundaries, not by a background thread, so behaviour is fully
+deterministic for tests and single-threaded servers.  All sessions of one
+:class:`~repro.db.graphdb.GraphDB` share its engine, so they share one warm
+plan cache; the database lock serializes flushes from concurrent threads.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.sparql import Query
+from repro.engine.template import TemplateInstance
+
+from .results import ResultSet
+
+
+class ResultFuture:
+    """Handle for one submitted request; resolves when its batch flushes."""
+
+    __slots__ = ("_session", "_result")
+
+    def __init__(self, session: "Session"):
+        self._session = session
+        self._result: ResultSet | None = None
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> ResultSet:
+        """The request's :class:`ResultSet`, flushing the session if needed."""
+        if self._result is None:
+            self._session.flush()
+        if self._result is None:
+            # only reachable when an exception tore down the session's
+            # `with` block and dropped its pending work unresolved
+            raise RuntimeError(
+                "request was dropped: its session exited on an exception "
+                "before flushing"
+            )
+        return self._result
+
+    def _resolve(self, rs: ResultSet) -> None:
+        self._result = rs
+
+
+class Session:
+    """Submit/flush request surface over one :class:`GraphDB`."""
+
+    def __init__(
+        self,
+        db,
+        *,
+        max_delay_ms: float = 5.0,
+        max_pending: int | None = None,
+    ):
+        if max_delay_ms < 0:
+            raise ValueError("max_delay_ms must be >= 0")
+        self._db = db
+        self._engine = db._engine
+        self.max_delay_ms = max_delay_ms
+        self.max_pending = (
+            max_pending if max_pending is not None else max(self._engine.buckets)
+        )
+        if self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        self._pending: list[
+            tuple[ResultFuture, tuple[Query, TemplateInstance | None]]
+        ] = []
+        self._group_counts: dict[str, int] = {}
+        self._deadline: float | None = None
+        self._closed = False
+        self.submitted = 0
+        self.flushes = 0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def submit(self, query) -> ResultFuture:
+        """Queue one request; returns a future resolved at the next flush.
+
+        ``query`` may be text, a parsed :class:`Query`, or a
+        :class:`~repro.db.builder.Q` builder.  Parsing happens here so
+        syntax errors surface at the submit site, not inside a later flush.
+        """
+        if self._closed:
+            raise RuntimeError("session is closed")
+        # prepare (parse + union_split + canonicalize) exactly once: the
+        # admission counter needs the template key here, and the flush hands
+        # the prepared pair straight to Engine.execute_prepared
+        q, inst = self._engine.prepare(self._db._coerce(query))
+        fut = ResultFuture(self)
+        self._pending.append((fut, (q, inst)))
+        self.submitted += 1
+
+        # admission policy --------------------------------------------- #
+        now = time.monotonic()
+        if self._deadline is None:
+            self._deadline = now + self.max_delay_ms / 1e3
+        if inst is not None:
+            # same template key => same microbatch; count toward its cap
+            key = inst.template.key
+            n = self._group_counts.get(key, 0) + 1
+            self._group_counts[key] = n
+            if n >= self.max_pending:
+                self.flush()
+                return fut
+        if now >= self._deadline:
+            self.flush()
+        return fut
+
+    def flush(self) -> int:
+        """Release all pending requests as one microbatched engine call.
+
+        Resolves every pending future; returns how many were resolved.
+        """
+        if not self._pending:
+            self._deadline = None
+            return 0
+        pending, self._pending = self._pending, []
+        self._group_counts.clear()
+        self._deadline = None
+        results = self._db._execute_prepared([prep for _, prep in pending])
+        for (fut, _), rs in zip(pending, results):
+            fut._resolve(rs)
+        self.flushes += 1
+        return len(pending)
+
+    def close(self) -> None:
+        """Flush outstanding work and reject further submits."""
+        if not self._closed:
+            self.flush()
+            self._closed = True
+
+    # ------------------------------------------------------------------ #
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:
+            # an exception unwound the block: drop pending work unresolved
+            # rather than masking the error with a flush that may also fail
+            self._pending.clear()
+            self._group_counts.clear()
+            self._deadline = None
+            self._closed = True
+
+    def __repr__(self) -> str:
+        return (
+            f"Session(pending={self.pending}, submitted={self.submitted}, "
+            f"flushes={self.flushes}, max_delay_ms={self.max_delay_ms}, "
+            f"max_pending={self.max_pending})"
+        )

@@ -19,10 +19,12 @@ bucketed batch sizes so traces are reused (:mod:`batcher`), and the fixpoint
 engine (dense / packed / sparse) is chosen per plan by a cost model
 (:mod:`cost`) instead of a hard-coded flag.
 """
+import warnings
+
 from .batcher import BatchLayout, MicroBatcher, batch_layout, batched_soi, bucket_for
 from .cache import CacheStats, PlanCache
 from .cost import CostEstimate, choose_engine, estimate_costs
-from .engine import Engine, EngineMetrics, ExecResult
+from .engine import Engine, EngineMetrics
 from .plan import CompiledPlan, PlanMetrics
 from .template import (
     SLOT_PREFIX,
@@ -31,6 +33,22 @@ from .template import (
     canonicalize,
     template_key,
 )
+
+def __getattr__(name: str):
+    # deprecation shim: repro.db.ResultSet is the public result type now;
+    # the raw ExecResult record remains reachable for old callers but warns.
+    if name == "ExecResult":
+        warnings.warn(
+            "importing ExecResult from repro.engine is deprecated; use the "
+            "repro.db public API (Session/GraphDB return repro.db.ResultSet)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from .engine import ExecResult
+
+        return ExecResult
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "BatchLayout",

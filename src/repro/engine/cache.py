@@ -22,6 +22,7 @@ class CacheStats:
     evictions: int = 0
     size: int = 0
     capacity: int = 0
+    invalidations: int = 0  # entries dropped by invalidate(), not LRU pressure
 
     @property
     def hit_rate(self) -> float:
@@ -63,6 +64,7 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
         self._entries: OrderedDict[Hashable, V] = OrderedDict()
 
     def __len__(self) -> int:
@@ -86,6 +88,21 @@ class PlanCache:
             self.evictions += 1
         return value
 
+    def invalidate(self, stale: Callable[[Hashable], bool]) -> int:
+        """Drop exactly the entries whose key satisfies ``stale``.
+
+        This is the precise (non-flush) invalidation path used on graph
+        mutation: only plans bound to fingerprints outside the version
+        history are removed, everything else keeps its LRU position.
+        Returns the number of entries dropped (also accumulated in
+        ``invalidations``).
+        """
+        keys = [k for k in self._entries if stale(k)]
+        for k in keys:
+            del self._entries[k]
+        self.invalidations += len(keys)
+        return len(keys)
+
     def clear(self) -> None:
         self._entries.clear()
 
@@ -96,4 +113,5 @@ class PlanCache:
             evictions=self.evictions,
             size=len(self._entries),
             capacity=self.capacity,
+            invalidations=self.invalidations,
         )

@@ -54,11 +54,17 @@ class EngineMetrics:
     engine_counts: dict[str, int]
     cache: CacheStats
     stage_seconds: dict[str, float]
+    invalidation_events: int = 0  # refreshes that adopted a mutated snapshot
+    adj_invalidations: int = 0  # adjacency entries dropped on those refreshes
 
     @property
     def plan_builds(self) -> int:
         # every cache miss builds exactly one plan; single source of truth
         return self.cache.misses
+
+    @property
+    def plan_invalidations(self) -> int:
+        return self.cache.invalidations
 
 
 def graph_fingerprint(g: Graph) -> str:
@@ -74,14 +80,18 @@ class Engine:
 
     def __init__(
         self,
-        db: Graph,
+        db,
         *,
         engine: str = "auto",
         cache_capacity: int = 64,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         backend: str | None = None,
     ):
-        self.db = db
+        # ``db`` is either an immutable core Graph or a mutable source with
+        # (graph, version, fingerprint, node_index) — i.e. repro.db.GraphDB.
+        # Duck-typed so this module never imports the layer above it.
+        self._source = db if hasattr(db, "graph") and hasattr(db, "version") else None
+        self.db: Graph = self._source.graph if self._source is not None else db
         self.engine_pref = engine
         self.buckets = tuple(sorted(buckets))
         self.backend = backend
@@ -89,16 +99,59 @@ class Engine:
         # (engine, mats) -> device adjacency, shared across plans; bounded so
         # a churning template mix cannot pin unbounded device memory
         self._adj_cache = BoundedDict(capacity=16)
-        self.fingerprint = graph_fingerprint(db)
-        self._node_index = (
-            {n: i for i, n in enumerate(db.node_names)}
-            if db.node_names is not None
-            else {}
-        )
+        if self._source is not None:
+            self.fingerprint = self._source.fingerprint
+            self._version = self._source.version
+            self._node_index = self._source.node_index
+        else:
+            self.fingerprint = graph_fingerprint(self.db)
+            self._version = None
+            self._node_index = (
+                {n: i for i, n in enumerate(self.db.node_names)}
+                if self.db.node_names is not None
+                else {}
+            )
+        self._prev_db: Graph = self.db  # adjacency retention window
         self._requests = 0
         self._microbatches = 0
+        self._invalidation_events = 0
+        self._adj_invalidations = 0
         self._engine_counts: dict[str, int] = {}
         self._stage_seconds: dict[str, float] = {}
+
+    # ------------------------------------------------------------------ #
+    # versioned invalidation (repro.db.GraphDB mutations)
+    # ------------------------------------------------------------------ #
+    def refresh(self) -> int:
+        """Adopt the source database's current snapshot if it has mutated.
+
+        Called on every execute/plan access; a no-op unless the source's
+        monotone version counter moved.  Invalidation is *precise*, not a
+        flush: plans keyed by the engine's current or immediately-previous
+        fingerprint survive (history <= 1 version, so results in flight keep
+        their plans), anything older is dropped and counted in
+        ``cache.invalidations``.  Adjacency entries built from graphs outside
+        that window are dropped too — they can never hit again because the
+        adjacency cache matches on graph identity.
+
+        Returns the number of plans invalidated by this call.
+        """
+        if self._source is None or self._source.version == self._version:
+            return 0
+        prev_fp, prev_db = self.fingerprint, self.db
+        self.db = self._source.graph
+        self.fingerprint = self._source.fingerprint
+        self._version = self._source.version
+        self._node_index = self._source.node_index
+        keep_fp = {self.fingerprint, prev_fp}
+        dropped = self.cache.invalidate(lambda key: key[1] not in keep_fp)
+        for k, (g_stored, _) in list(self._adj_cache.items()):
+            if g_stored is not self.db and g_stored is not prev_db:
+                del self._adj_cache[k]
+                self._adj_invalidations += 1
+        self._prev_db = prev_db
+        self._invalidation_events += 1
+        return dropped
 
     # ------------------------------------------------------------------ #
     # plan access
@@ -110,6 +163,7 @@ class Engine:
 
         Returns ``(plan, cache_hit)``.
         """
+        self.refresh()
         template = (
             instance_or_template.template
             if isinstance(instance_or_template, TemplateInstance)
@@ -137,6 +191,7 @@ class Engine:
     def execute(self, query: str | Query) -> ExecResult:
         """Run one query end-to-end (parse → plans → solve → prune)."""
         t0 = time.perf_counter()
+        self.refresh()
         q, t_parse = self._parse(query)
         parts = sparql.union_split(q)
         partials = []
@@ -146,21 +201,42 @@ class Engine:
         res = _merge_union(partials, self.db)
         res.timings["parse"] = t_parse
         res.timings["total"] = time.perf_counter() - t0
+        res.timings["batch_total"] = res.timings["total"]  # batch of one
         self._requests += 1
         self._bump_stage("parse", t_parse)
         return res
 
+    def prepare(self, query: str | Query) -> tuple[Query, TemplateInstance | None]:
+        """Parse + canonicalize a request once, ahead of execution.
+
+        Returns ``(query, instance)`` where ``instance`` is the canonical
+        template instance for union-free requests and ``None`` for UNION
+        requests (which need cross-part merging and run unbatched).  The
+        result is graph-independent, so it stays valid across mutations —
+        sessions prepare at submit time (they need the template key for
+        admission anyway) and hand the prepared pairs to
+        :meth:`execute_prepared` at flush, paying canonicalization once.
+        """
+        q, t_parse = self._parse(query)
+        self._bump_stage("parse", t_parse)
+        parts = sparql.union_split(q)
+        return q, canonicalize(parts[0]) if len(parts) == 1 else None
+
     def execute_many(self, queries: Sequence[str | Query]) -> list[ExecResult]:
         """Run a request list, microbatching same-template requests."""
-        results: list[ExecResult | None] = [None] * len(queries)
+        return self.execute_prepared([self.prepare(q) for q in queries])
+
+    def execute_prepared(
+        self, prepared: Sequence[tuple[Query, TemplateInstance | None]]
+    ) -> list[ExecResult]:
+        """Run requests already split by :meth:`prepare`."""
+        self.refresh()
+        results: list[ExecResult | None] = [None] * len(prepared)
         batcher = MicroBatcher(self.buckets)
         multipart: list[tuple[int, Query]] = []
-        for idx, query in enumerate(queries):
-            q, t_parse = self._parse(query)
-            self._bump_stage("parse", t_parse)
-            parts = sparql.union_split(q)
-            if len(parts) == 1:
-                batcher.add(idx, canonicalize(parts[0]))
+        for idx, (q, inst) in enumerate(prepared):
+            if inst is not None:
+                batcher.add(idx, inst)
             else:
                 # UNION requests need cross-part merging; run them unbatched
                 multipart.append((idx, q))
@@ -168,12 +244,16 @@ class Engine:
             t_mb = time.perf_counter()
             solved = self._solve_microbatch(mb.requests, bucket=mb.bucket)
             dt = time.perf_counter() - t_mb
+            # honest attribution: the microbatch wall time is a *batch*
+            # property; a request's own "total" is its fair share of it
+            share = dt / len(mb.requests)
             for idx, res in solved:
-                res.timings["total"] = dt  # this microbatch only
+                res.timings["batch_total"] = dt
+                res.timings["total"] = share
                 results[idx] = res
         for idx, q in multipart:
             results[idx] = self.execute(q)
-        self._requests += len(queries) - len(multipart)  # execute() counted the rest
+        self._requests += len(prepared) - len(multipart)  # execute() counted the rest
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------ #
@@ -254,6 +334,8 @@ class Engine:
             engine_counts=dict(self._engine_counts),
             cache=self.cache.stats(),
             stage_seconds=dict(self._stage_seconds),
+            invalidation_events=self._invalidation_events,
+            adj_invalidations=self._adj_invalidations,
         )
 
 

@@ -86,7 +86,7 @@ class CompiledPlan:
                 for c in union.is_const
             ],
         )
-        self.csoi = soi_mod.compile_soi(stripped, db)
+        self.csoi = soi_mod.compile_soi(stripped, db, node_index=node_index)
 
         # (instance, slot variable) scatter order; row j of const_rows lands
         # in init row scatter_ids[j] and carries constants[slot_of[j]]

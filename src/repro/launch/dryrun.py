@@ -20,7 +20,6 @@ import time
 import traceback
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.distributed.ctx import logical_axis_rules

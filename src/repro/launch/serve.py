@@ -1,13 +1,16 @@
-"""Batched dual-simulation query serving driver — now on `repro.engine`.
+"""Batched dual-simulation query serving driver — on the `repro.db` API.
 
 Serves a stream of constant-parameterized query-template instances through
-the :class:`repro.engine.Engine` facade: the query shape is compiled ONCE
-into a cached plan (per microbatch bucket), every subsequent request rebinds
-constants as jitted-fixpoint *inputs* (zero recompiles, zero retraces), and
-each batch of instances is solved as one disjoint-union SOI
-(DESIGN.md Sect. 5; the batch16_sparse dry-run cell).
+a :class:`repro.db.Session`: requests are submitted as futures and the
+deadline/size admission policy releases them to the engine as microbatches
+(DESIGN.md Sect. 6.2).  The query shape is compiled ONCE into a cached
+plan per microbatch bucket; every subsequent request rebinds constants as
+jitted-fixpoint *inputs* (zero recompiles, zero retraces).  With
+``--mutate``, the driver also inserts fresh triples mid-stream to show
+versioned plan invalidation: stale plans rebuild lazily and the metrics
+line reports exactly how many were invalidated.
 
-    PYTHONPATH=src python -m repro.launch.serve --batch 8 --requests 32
+    PYTHONPATH=src python -m repro.launch.serve --requests 32 --mutate
 """
 from __future__ import annotations
 
@@ -17,54 +20,62 @@ import time
 import numpy as np
 
 from repro.data import synth
-from repro.engine import Engine
+from repro.db import GraphDB
+
+QUERY = "{{ ?d subOrganizationOf {uni} . ?s memberOf ?d }}"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="session bucket cap (max pending per template)")
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-delay-ms", type=float, default=50.0)
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "sparse", "dense", "packed"],
                     help="fixpoint engine; 'auto' = cost-based selection")
+    ap.add_argument("--mutate", action="store_true",
+                    help="insert triples mid-stream to demo invalidation")
     args = ap.parse_args()
 
-    db = synth.lubm_like(n_universities=8, seed=0)
-    print(f"database: {db.n_edges} triples / {db.n_nodes} nodes")
+    db = GraphDB(synth.lubm_like(n_universities=8, seed=0), engine=args.engine)
+    print(f"database: {db.n_triples} triples / {db.n_nodes} nodes")
 
-    eng = Engine(db, engine=args.engine)
-
-    # query template: department members of a given university (?u = const)
-    unis = [n for n in db.node_names if n.startswith("Univ")]
+    unis = [n for n in db.graph.node_names if n.startswith("Univ")]
     rng = np.random.default_rng(0)
     requests = [
-        f"{{ ?d subOrganizationOf {unis[rng.integers(len(unis))]} . "
-        f"?s memberOf ?d }}"
+        QUERY.format(uni=unis[rng.integers(len(unis))])
         for _ in range(args.requests)
     ]
 
-    served = 0
     t_all = time.perf_counter()
-    while served < len(requests):
-        chunk = requests[served : served + args.batch]
-        t0 = time.perf_counter()
-        results = eng.execute_many(chunk)
-        dt = time.perf_counter() - t0
-        r = results[0]
-        print(
-            f"batch of {len(chunk)}: {r.sweeps} sweeps, {dt*1e3:.1f} ms, "
-            f"engine={r.engine}, "
-            + ", ".join(f"{x.stats.n_after}/{x.stats.n_triples}" for x in results[:4])
-            + (" ... triples survive" if len(results) > 4 else " triples survive")
-        )
-        served += len(chunk)
+    with db.session(max_delay_ms=args.max_delay_ms,
+                    max_pending=args.batch) as session:
+        futures = [session.submit(q) for q in requests]
+        if args.mutate:
+            # mid-stream update: bumps the version, invalidates stale plans
+            db.insert([("DeptNew", "subOrganizationOf", unis[0]),
+                       ("StudentNew", "memberOf", "DeptNew")])
+        results = [f.result() for f in futures]
     total = time.perf_counter() - t_all
 
-    m = eng.metrics()
+    for i in range(0, len(results), args.batch):
+        chunk = results[i : i + args.batch]
+        r = chunk[0]
+        print(
+            f"batch of {len(chunk)}: {r.sweeps} sweeps, "
+            f"{r.timings['batch_total']*1e3:.1f} ms batch, engine={r.engine}, "
+            + ", ".join(f"{len(x)}/{x.stats.n_triples}" for x in chunk[:4])
+            + (" ... triples survive" if len(chunk) > 4 else " triples survive")
+        )
+
+    m = db.metrics()
     print(
-        f"served {served} requests in {total:.2f}s ({served/total:.1f} req/s); "
+        f"served {len(results)} requests in {total:.2f}s "
+        f"({len(results)/total:.1f} req/s) over {session.flushes} flushes; "
         f"plan cache: {m.cache.hits} hits / {m.cache.misses} misses "
         f"({m.cache.hit_rate:.0%}), {m.plan_builds} plans built, "
+        f"{m.plan_invalidations} invalidated (v{db.version}), "
         f"engines={m.engine_counts}"
     )
 

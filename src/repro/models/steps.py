@@ -11,7 +11,6 @@ the same sharding as the parameters (FSDP extends to the accumulator).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

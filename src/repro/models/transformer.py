@@ -17,7 +17,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed.ctx import constrain
 
@@ -510,7 +509,6 @@ def prefill_step(
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     last_logits = x[:, -1] @ params["unembed"].astype(cfg.dtype)
-    s_c = ks.shape[2]
     cache = {"k": ks, "v": vs, "pos": jnp.full((b,), s, jnp.int32)}
     return last_logits, cache
 
@@ -532,7 +530,6 @@ def decode_step(
     cfg: LMConfig, params: dict, cache: dict, tokens: jax.Array
 ) -> tuple[jax.Array, dict]:
     """One-token decode: tokens [B, 1]; rolling cache for SWA."""
-    b = tokens.shape[0]
     positions = cache["pos"][:, None]  # [B, 1]
     x = params["embed"].astype(cfg.dtype)[tokens]
     s_cache = cache["k"].shape[2]

@@ -8,6 +8,8 @@ module at collection — plain tests in the same file keep running.
 """
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

@@ -1,6 +1,5 @@
 """Checkpointing, fault tolerance, optimizer, compression, data pipeline."""
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -157,7 +156,6 @@ def test_pipeline_deterministic_replay():
         corpus, batch=8, seq=16, seed=7,
         shard=pipeline.ShardSpec(0, 2), start_step=start,
     )
-    a = [next(mk(0)) for _ in range(1)]
     it = mk(0)
     b0, b1, b2 = next(it), next(it), next(it)
     # replay from step 2 reproduces batch 2 exactly

@@ -1,6 +1,4 @@
 """Join-evaluator semantics (the Tables 4/5 'database system' stand-in)."""
-import numpy as np
-
 from repro.core import join, sparql
 from repro.core.graph import Graph
 

@@ -2,10 +2,11 @@
 renaming (Lemmas 4/5 + the Sect. 4.4 'syntactically closest' rule), and the
 soundness theorem (Thm. 2) as a property test against the join evaluator."""
 import numpy as np
+import pytest
 from tests._hyp import given, settings, st
 
 from repro.core import dualsim, join, soi, sparql
-from repro.core.sparql import And, BGP, Optional_, Union_, parse
+from repro.core.sparql import And, BGP, Optional_, Union_, format_query, parse
 from repro.data import synth
 
 LABELS = ["p0", "p1", "p2"]
@@ -156,3 +157,60 @@ def test_regression_multi_merge_stale_ids():
         for val in np.unique(col):
             if val >= 0:
                 assert res[var][val], (var, val)
+
+
+# --------------------------------------------------------------------- #
+# parser hardening: empty groups, positions, EOF (ISSUE 2 satellite)
+# --------------------------------------------------------------------- #
+def test_parse_rejects_empty_group():
+    with pytest.raises(SyntaxError, match=r"empty group '\{\}' at line 1"):
+        parse("{}")
+    # nested empty group too, with the *group's* position
+    with pytest.raises(SyntaxError, match=r"empty group '\{\}' at line 2, column 5"):
+        parse("{ ?a p0 ?b }\nAND {}")
+
+
+def test_parse_error_line_and_column():
+    with pytest.raises(SyntaxError, match=r"bad token at '!!"):
+        parse("SELECT WHERE {\n  ?a p0 ?b .\n  !!\n}")
+    try:
+        parse("SELECT WHERE {\n  ?a p0 ?b .\n  !!\n}")
+    except SyntaxError as e:
+        assert "line 3, column 3" in str(e)
+
+
+def test_parse_unexpected_eof_and_trailing():
+    with pytest.raises(SyntaxError, match="unexpected end of query"):
+        parse("{ ?a p0 ?b")
+    with pytest.raises(SyntaxError, match="trailing tokens"):
+        parse("{ ?a p0 ?b } }")
+    with pytest.raises(SyntaxError, match="empty query"):
+        parse("   ")
+    with pytest.raises(SyntaxError, match="expected term"):
+        parse("{ ?a p0 }")
+
+
+# --------------------------------------------------------------------- #
+# format_query: inverse of parse (ISSUE 2 builder contract)
+# --------------------------------------------------------------------- #
+FORMAT_SAMPLES = [
+    "{ ?a p0 ?b . ?b p1 ?c }",
+    "{ ?a p0 Berlin }",
+    "{ ?a p0 ?b } AND { ?b p1 ?c }",
+    "{ ?a p0 ?b } OPTIONAL { ?c p2 ?a }",
+    "{ { ?a p0 ?b } UNION { ?a p1 ?b } } AND { ?b p2 ?c }",
+    "{ ?s p0 ?d } OPTIONAL { { ?d p1 C0 } UNION { ?d p1 C1 } }",
+]
+
+
+@pytest.mark.parametrize("text", FORMAT_SAMPLES)
+def test_format_query_roundtrip(text):
+    q = parse(text)
+    assert parse(format_query(q)) == q
+    # idempotent: formatting the reparse formats identically
+    assert format_query(parse(format_query(q))) == format_query(q)
+
+
+def test_format_query_rejects_empty_bgp():
+    with pytest.raises(ValueError, match="empty BGP"):
+        format_query(BGP(()))
