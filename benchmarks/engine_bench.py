@@ -19,6 +19,13 @@ contract of benchmarks/run.py) and written to results/bench/engine.json:
   workload.
 * ``invalidation`` — latency of the first query after an insert (plan
   rebuild) vs a warm query, the price of a version bump.
+* ``partitioned`` (``--engine partitioned``) — the full section set runs
+  through the destination-partitioned engine on a mesh of ``--devices``
+  simulated host devices (``XLA_FLAGS=--xla_force_host_platform_device_
+  count=N``, set before the backend initializes) and the results JSON is
+  written per engine (``engine.partitioned.json``).
+
+    PYTHONPATH=src python benchmarks/engine_bench.py --engine partitioned --devices 8
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import numpy as np
 
 from repro.data import synth
 from repro.db import GraphDB
+from repro.distributed import ctx as dctx
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
@@ -45,9 +53,10 @@ def _mk_requests(db: GraphDB, n: int, seed: int = 0) -> list[str]:
     ]
 
 
-def cold_warm(graph, *, engine: str = "auto", warm_iters: int = 20) -> dict:
+def cold_warm(graph, *, engine: str = "auto", warm_iters: int = 20,
+              mesh=None) -> dict:
     """Cold (first-ever) vs warm (constant-rebound) query latency."""
-    db = GraphDB(graph, engine=engine)
+    db = GraphDB(graph, engine=engine, mesh=mesh)
     reqs = _mk_requests(db, warm_iters + 1)
 
     t0 = time.perf_counter()
@@ -77,11 +86,11 @@ def cold_warm(graph, *, engine: str = "auto", warm_iters: int = 20) -> dict:
 
 
 def throughput(graph, *, engine: str = "auto", batch_sizes=(1, 4, 8, 16),
-               n_requests: int = 64) -> list[dict]:
+               n_requests: int = 64, mesh=None) -> list[dict]:
     """Requests/second through deadline-batched sessions per bucket cap."""
     rows = []
     for batch in batch_sizes:
-        db = GraphDB(graph, engine=engine)
+        db = GraphDB(graph, engine=engine, mesh=mesh)
         reqs = _mk_requests(db, n_requests, seed=batch)
         # warm pass: chunks with fewer unique constants hit smaller buckets,
         # so a full pass is needed to build every (template, bucket) plan
@@ -106,9 +115,9 @@ def throughput(graph, *, engine: str = "auto", batch_sizes=(1, 4, 8, 16),
     return rows
 
 
-def invalidation(graph, *, engine: str = "auto") -> dict:
+def invalidation(graph, *, engine: str = "auto", mesh=None) -> dict:
     """Warm query vs first query after an insert (stale-plan rebuild)."""
-    db = GraphDB(graph, engine=engine)
+    db = GraphDB(graph, engine=engine, mesh=mesh)
     q = _mk_requests(db, 1)[0]
     db.query(q)  # cold build
     t0 = time.perf_counter()
@@ -134,7 +143,12 @@ def invalidation(graph, *, engine: str = "auto") -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--universities", type=int, default=8)
-    ap.add_argument("--engine", default="auto")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "dense", "packed", "sparse",
+                             "jacobi_packed", "partitioned"])
+    ap.add_argument("--devices", type=int, default=0,
+                    help="mesh of N simulated host devices (default: 8 for "
+                         "--engine partitioned, else no mesh)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke mode: small graph, few requests")
@@ -142,19 +156,34 @@ def main() -> None:
     if args.tiny:
         args.universities = min(args.universities, 2)
         args.requests = min(args.requests, 12)
+    if args.devices == 0 and args.engine == "partitioned":
+        args.devices = 8
+
+    mesh = None
+    if args.devices > 1:
+        # must run before the first JAX computation initializes the backend
+        dctx.force_host_device_count(args.devices)
+        mesh = dctx.node_mesh(args.devices)
 
     graph = synth.lubm_like(n_universities=args.universities, seed=0)
-    print(f"# database: {graph.n_edges} triples / {graph.n_nodes} nodes")
+    print(f"# database: {graph.n_edges} triples / {graph.n_nodes} nodes"
+          + (f" on a mesh of {args.devices} devices" if mesh is not None else ""))
 
     warm_iters = 5 if args.tiny else 20
     batch_sizes = (1, 4) if args.tiny else (1, 4, 8, 16)
-    rows = [cold_warm(graph, engine=args.engine, warm_iters=warm_iters)]
+    rows = [cold_warm(graph, engine=args.engine, warm_iters=warm_iters,
+                      mesh=mesh)]
     rows += throughput(graph, engine=args.engine, n_requests=args.requests,
-                       batch_sizes=batch_sizes)
-    rows.append(invalidation(graph, engine=args.engine))
+                       batch_sizes=batch_sizes, mesh=mesh)
+    rows.append(invalidation(graph, engine=args.engine, mesh=mesh))
+    for r in rows:
+        r["n_devices"] = max(args.devices, 1)
 
     os.makedirs(RESULTS, exist_ok=True)
-    with open(os.path.join(RESULTS, "engine.json"), "w") as f:
+    # per-engine result files so a partitioned run never clobbers the
+    # single-device trajectory (CI uploads results/bench/*.json)
+    name = "engine.json" if args.engine == "auto" else f"engine.{args.engine}.json"
+    with open(os.path.join(RESULTS, name), "w") as f:
         json.dump(rows, f, indent=1, default=str)
 
     cw = rows[0]

@@ -9,10 +9,17 @@ Four engines compute the largest solution of a compiled SOI:
   Pallas ``bitmm`` kernel (64x less HBM traffic than bf16 dense).
 * ``solve_sparse`` — edge-list engine: the boolean product is a gather +
   ``segment_max`` over edges, i.e. message passing in the OR-AND semiring.
-  The only engine that scales to DB-sized graphs; shards over a device mesh.
+  ``mode="gs"`` is paper-faithful Gauss–Seidel; ``mode="jacobi_packed"``
+  reads one bit-packed frontier broadcast per sweep.
+* ``solve_partitioned`` — destination-partitioned (vertex-cut) edge blocks
+  over a device mesh: block-local segment reductions, one n/8-byte packed
+  chi broadcast of cross-shard traffic per sweep (DESIGN.md Sect. 7).
 * ``solve_worklist`` — the paper's own sequential strategy (Sect. 3.2 steps
   1–2 with the Sect. 3.3 heuristics); numpy, used for Table-2 parity and
   iteration-count studies.
+
+All batched engines iterate their sweep through the single
+:func:`_sweep_fixpoint` driver — they differ only in the sweep body.
 
 All batched engines implement the same monotone operator
 
@@ -186,37 +193,60 @@ def make_sparse_operands(
     return Operands(edge_src=src, edge_dst=dst, **_base_operands(c))
 
 
+def padded_node_count(n: int, n_blocks: int) -> int:
+    """Smallest multiple of ``n_blocks`` holding ``n`` nodes (block size is
+    uniform across shards; pad columns are dead and sliced off after the
+    solve)."""
+    return max(-(-n // n_blocks), 1) * n_blocks
+
+
 def make_partitioned_operands(
-    c: CompiledSOI, g: Graph, n_blocks: int
+    c: CompiledSOI, g: Graph, n_blocks: int, adj_cache: dict | None = None
 ) -> Operands:
     """Destination-partitioned (vertex-cut) edge layout: the host-side graph
-    partitioner of the ``partitioned`` engine.  Requires n % n_blocks == 0
-    (pad the graph); blocks are padded to a common edge count."""
+    partitioner of the ``partitioned`` engine.
+
+    The node axis is padded up to a multiple of ``n_blocks``
+    (:func:`padded_node_count`) so callers never have to align the graph
+    themselves — pad columns start all-False in ``init``, receive no edges,
+    and stay dead through every monotone sweep; slice ``chi[:, :g.n_nodes]``
+    after solving.  Blocks are padded to a common edge count (pad rows use
+    the out-of-range local id ``n_local`` and are dropped by the segment
+    reduce).  Like the other layouts, the edge blocks depend only on
+    (mats, graph, n_blocks) and are shared across plans via ``adj_cache``.
+    """
     n = g.n_nodes
-    assert n % n_blocks == 0, "pad n_nodes to a multiple of n_blocks"
-    n_local = n // n_blocks
-    srcs_b, dsts_b = [], []
-    for a, d in c.mats:
-        e = g.edges_for_label(a)
-        s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
-        blk = t // n_local
-        order = np.argsort(blk, kind="stable")
-        s, t, blk = s[order], t[order], blk[order]
-        counts = np.bincount(blk, minlength=n_blocks)
-        eb = max(int(counts.max()), 1)
-        src_b = np.zeros((n_blocks, eb), np.int32)
-        dst_b = np.full((n_blocks, eb), n_local, np.int32)  # pad -> dropped
-        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-        for w in range(n_blocks):
-            k = counts[w]
-            src_b[w, :k] = s[starts[w] : starts[w] + k]
-            dst_b[w, :k] = t[starts[w] : starts[w] + k] - w * n_local
-        srcs_b.append(jnp.asarray(src_b))
-        dsts_b.append(jnp.asarray(dst_b))
-    return Operands(
-        edge_src_b=tuple(srcs_b), edge_dst_b=tuple(dsts_b),
-        **_base_operands(c),
+    n_pad = padded_node_count(n, n_blocks)
+    n_local = n_pad // n_blocks
+
+    def build():
+        srcs_b, dsts_b = [], []
+        for a, d in c.mats:
+            e = g.edges_for_label(a)
+            s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
+            blk = t // n_local
+            order = np.argsort(blk, kind="stable")
+            s, t, blk = s[order], t[order], blk[order]
+            counts = np.bincount(blk, minlength=n_blocks)
+            eb = max(int(counts.max()), 1)
+            src_b = np.zeros((n_blocks, eb), np.int32)
+            dst_b = np.full((n_blocks, eb), n_local, np.int32)  # pad -> dropped
+            starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            for w in range(n_blocks):
+                k = counts[w]
+                src_b[w, :k] = s[starts[w] : starts[w] + k]
+                dst_b[w, :k] = t[starts[w] : starts[w] + k] - w * n_local
+            srcs_b.append(jnp.asarray(src_b))
+            dsts_b.append(jnp.asarray(dst_b))
+        return tuple(srcs_b), tuple(dsts_b)
+
+    src_b, dst_b = _cached_adj(
+        adj_cache, ("partitioned", tuple(c.mats), n_blocks), g, build
     )
+    base = _base_operands(c)
+    if n_pad != n:
+        base["init"] = jnp.pad(base["init"], ((0, 0), (0, n_pad - n)))
+    return Operands(edge_src_b=src_b, edge_dst_b=dst_b, **base)
 
 
 # --------------------------------------------------------------------- #
@@ -229,6 +259,17 @@ def _wsc(x: jax.Array, spec) -> jax.Array:
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _replicated(spec):
+    """The fully-replicated counterpart of a chi sharding spec."""
+    if spec is None:
+        return None
+    if isinstance(spec, jax.sharding.NamedSharding):
+        return jax.sharding.NamedSharding(
+            spec.mesh, jax.sharding.PartitionSpec()
+        )
+    return jax.sharding.PartitionSpec()
 
 
 def _apply_mat(chi: jax.Array, y: jax.Array, m: int, ops: Operands) -> jax.Array:
@@ -250,26 +291,20 @@ def _apply_copies(chi: jax.Array, ops: Operands) -> jax.Array:
     return jnp.logical_and(chi, per_var)
 
 
-def _fixpoint(
-    propagate_m: Callable[[jax.Array, int], jax.Array],
-    ops: Operands,
+def _sweep_fixpoint(
+    sweep: Callable[[jax.Array], jax.Array],
+    init: jax.Array,
     max_sweeps: int | None,
     chi_spec=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Iterate full sweeps until chi stops shrinking.
+    """The one fixpoint driver every batched engine runs on.
 
-    One sweep = for each (label, direction) operator m: one boolean product
-    ``y = chi x_b M_m`` (all variables batched) followed by the AND-updates
-    of m's inequalities — applied immediately (Gauss–Seidel within a sweep;
-    one y tensor live at a time).  Returns (chi, n_sweeps).
+    Iterates ``sweep`` (any monotone shrink of chi) from ``init`` until chi
+    stops changing (or ``max_sweeps``); engines differ only in the sweep
+    body they plug in.  Knaster–Tarski on the finite powerset lattice makes
+    this safe: every sweep order reaches the same greatest fixpoint.
+    Returns (chi, n_sweeps).
     """
-    n_mats = len(ops.mat_rhs)
-
-    def sweep(chi: jax.Array) -> jax.Array:
-        for m in range(n_mats):
-            y = propagate_m(chi, m)  # [V, n] bool
-            chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
-        return _apply_copies(chi, ops)
 
     def cond(state):
         _, _, changed = state
@@ -283,9 +318,37 @@ def _fixpoint(
             changed = jnp.logical_and(changed, it + 1 < max_sweeps)
         return new, it + 1, changed
 
-    state = (_wsc(ops.init, chi_spec), jnp.int32(0), jnp.bool_(True))
+    state = (_wsc(init, chi_spec), jnp.int32(0), jnp.bool_(True))
     chi, it, _ = jax.lax.while_loop(cond, body, state)
     return chi, it
+
+
+def _packed_frontier(chi: jax.Array, chi_spec=None) -> jax.Array:
+    """Bit-pack chi and replicate it: ONE n/8-byte broadcast serves every
+    operator of a Jacobi sweep (vs M chi-sized gathers under Gauss–Seidel)."""
+    packed = bitops.pack(chi)  # [V, n/32] uint32
+    packed = _wsc(packed, _replicated(chi_spec))
+    return bitops.unpack(packed, chi.shape[-1])  # replicated bool [V, n]
+
+
+def _fixpoint(
+    propagate_m: Callable[[jax.Array, int], jax.Array],
+    ops: Operands,
+    max_sweeps: int | None,
+    chi_spec=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Gauss–Seidel sweeps: one boolean product ``y = chi x_b M_m`` per
+    operator m (all variables batched), AND-updates applied immediately —
+    one y tensor live at a time."""
+    n_mats = len(ops.mat_rhs)
+
+    def sweep(chi: jax.Array) -> jax.Array:
+        for m in range(n_mats):
+            y = propagate_m(chi, m)  # [V, n] bool
+            chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
+        return _apply_copies(chi, ops)
+
+    return _sweep_fixpoint(sweep, ops.init, max_sweeps, chi_spec)
 
 
 @functools.partial(jax.jit, static_argnames=("dtype", "max_sweeps", "chi_spec"))
@@ -349,36 +412,20 @@ def solve_sparse(
 
     if mode == "gs":
         return _fixpoint(propagate_from, ops, max_sweeps, chi_spec)
+    if mode != "jacobi_packed":
+        raise ValueError(f"unknown sparse mode {mode!r}")
 
     n_mats = len(ops.mat_rhs)
 
     def sweep(chi: jax.Array) -> jax.Array:
         # one bit-packed replicate of chi serves every operator this sweep
-        packed = bitops.pack(chi)  # [V, n/32] uint32
-        if chi_spec is not None:
-            packed = jax.lax.with_sharding_constraint(
-                packed, jax.sharding.PartitionSpec()
-            )
-        frontier = bitops.unpack(packed, n)  # replicated bool [V, n]
+        frontier = _packed_frontier(chi, chi_spec)
         for m in range(n_mats):
             y = propagate_from(frontier, m)
             chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
         return _apply_copies(chi, ops)
 
-    def cond(state):
-        return state[2]
-
-    def body(state):
-        chi, it, _ = state
-        new = sweep(chi)
-        changed = jnp.any(new != chi)
-        if max_sweeps is not None:
-            changed = jnp.logical_and(changed, it + 1 < max_sweeps)
-        return new, it + 1, changed
-
-    state = (_wsc(ops.init, chi_spec), jnp.int32(0), jnp.bool_(True))
-    chi, it, _ = jax.lax.while_loop(cond, body, state)
-    return chi, it
+    return _sweep_fixpoint(sweep, ops.init, max_sweeps, chi_spec)
 
 
 @functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec"))
@@ -400,12 +447,7 @@ def solve_partitioned(
     n_mats = len(ops.mat_rhs)
 
     def sweep(chi: jax.Array) -> jax.Array:
-        packed = bitops.pack(chi)  # [V, n/32]
-        if chi_spec is not None:
-            packed = jax.lax.with_sharding_constraint(
-                packed, jax.sharding.PartitionSpec()
-            )
-        frontier = bitops.unpack(packed, n)  # replicated [V, n]
+        frontier = _packed_frontier(chi, chi_spec)
         for m in range(n_mats):
             def block(src_w, dst_w):
                 msgs = frontier[:, src_w].astype(jnp.int8)  # [V, Eb]
@@ -420,20 +462,7 @@ def solve_partitioned(
             chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
         return _apply_copies(chi, ops)
 
-    def cond(state):
-        return state[2]
-
-    def body(state):
-        chi, it, _ = state
-        new = sweep(chi)
-        changed = jnp.any(new != chi)
-        if max_sweeps is not None:
-            changed = jnp.logical_and(changed, it + 1 < max_sweeps)
-        return new, it + 1, changed
-
-    state = (_wsc(ops.init, chi_spec), jnp.int32(0), jnp.bool_(True))
-    chi, it, _ = jax.lax.while_loop(cond, body, state)
-    return chi, it
+    return _sweep_fixpoint(sweep, ops.init, max_sweeps, chi_spec)
 
 
 # --------------------------------------------------------------------- #
@@ -579,6 +608,7 @@ def largest_dual_simulation(
     *,
     engine: str = "dense",
     dtype=jnp.float32,
+    n_blocks: int = 4,
 ) -> tuple[np.ndarray, int]:
     """Largest dual simulation between ``pattern`` and ``db`` (Prop. 1).
 
@@ -600,33 +630,40 @@ def largest_dual_simulation(
                 out[node] = chi[seen[f"v{node}"]]
         return out
 
-    if engine == "dense":
-        ops = make_dense_operands(c, db)
-        chi, it = solve_dense(ops, dtype=dtype)
-    elif engine == "packed":
-        ops = make_packed_operands(c, db)
-        chi, it = solve_packed(ops)
-    elif engine == "sparse":
-        ops = make_sparse_operands(c, db)
-        chi, it = solve_sparse(ops)
-    elif engine == "worklist":
+    if engine == "worklist":
         chi, it = solve_worklist(c, db)
         return reorder(np.asarray(chi)), int(it)
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
-    return reorder(np.asarray(chi)), int(it)
+    chi, it = solve_compiled(c, db, engine=engine, dtype=dtype, n_blocks=n_blocks)
+    return reorder(chi), it
 
 
 def solve_compiled(
-    c: CompiledSOI, g: Graph, *, engine: str = "dense", dtype=jnp.float32
+    c: CompiledSOI,
+    g: Graph,
+    *,
+    engine: str = "dense",
+    dtype=jnp.float32,
+    n_blocks: int = 4,
 ) -> tuple[np.ndarray, int]:
-    """Solve a compiled SOI with the chosen engine; returns (chi, iters)."""
+    """Solve a compiled SOI with the chosen engine; returns (chi, iters).
+
+    Engines: ``dense``, ``packed``, ``sparse`` (Gauss–Seidel),
+    ``jacobi_packed`` (sparse with one packed frontier broadcast per sweep),
+    ``partitioned`` (destination-partitioned edge blocks; ``n_blocks``
+    shards, node axis auto-padded), ``worklist`` (numpy reference).
+    """
     if engine == "dense":
         chi, it = solve_dense(make_dense_operands(c, g), dtype=dtype)
     elif engine == "packed":
         chi, it = solve_packed(make_packed_operands(c, g))
     elif engine == "sparse":
         chi, it = solve_sparse(make_sparse_operands(c, g))
+    elif engine == "jacobi_packed":
+        chi, it = solve_sparse(make_sparse_operands(c, g), mode="jacobi_packed")
+    elif engine == "partitioned":
+        ops = make_partitioned_operands(c, g, n_blocks)
+        chi, it = solve_partitioned(ops)
+        chi = chi[:, : g.n_nodes]  # drop block-padding columns
     elif engine == "worklist":
         return solve_worklist(c, g)
     else:

@@ -34,6 +34,8 @@ class Graph:
     # lazily built indexes
     _fwd_csr: dict | None = dataclasses.field(default=None, repr=False)
     _bwd_csr: dict | None = dataclasses.field(default=None, repr=False)
+    _node_index: dict | None = dataclasses.field(default=None, repr=False)
+    _label_index: dict | None = dataclasses.field(default=None, repr=False)
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -71,13 +73,26 @@ class Graph:
     # ------------------------------------------------------------------ #
     # id helpers
     # ------------------------------------------------------------------ #
+    def node_index(self) -> dict[str, int]:
+        """Cached name -> id map over ``node_names`` (snapshots are
+        immutable, so building it once per graph is safe)."""
+        if self._node_index is None:
+            assert self.node_names is not None
+            self._node_index = {n: i for i, n in enumerate(self.node_names)}
+        return self._node_index
+
+    def label_index(self) -> dict[str, int]:
+        """Cached name -> id map over ``label_names``."""
+        if self._label_index is None:
+            assert self.label_names is not None
+            self._label_index = {n: i for i, n in enumerate(self.label_names)}
+        return self._label_index
+
     def node_id(self, name: str) -> int:
-        assert self.node_names is not None
-        return self.node_names.index(name)
+        return self.node_index()[name]
 
     def label_id(self, name: str) -> int:
-        assert self.label_names is not None
-        return self.label_names.index(name)
+        return self.label_index()[name]
 
     @property
     def n_edges(self) -> int:

@@ -70,7 +70,7 @@ def _eval(q: Query, g: Graph, jo: str = "selectivity") -> Bindings:
 # --------------------------------------------------------------------- #
 def _triple_table(t: Triple, g: Graph) -> Bindings:
     if g.label_names is not None and isinstance(t.p, str):
-        la = g.label_names.index(t.p) if t.p in g.label_names else -1
+        la = g.label_index().get(t.p, -1)
     else:
         la = int(t.p) if int(t.p) < g.n_labels else -1
     if la < 0:
@@ -227,9 +227,9 @@ def required_triples(q: Query, g: Graph, matches: Bindings) -> int:
         if isinstance(qq, BGP):
             for t in qq.triples:
                 if g.label_names is not None and isinstance(t.p, str):
-                    if t.p not in g.label_names:
+                    la = g.label_index().get(t.p)
+                    if la is None:
                         continue
-                    la = g.label_names.index(t.p)
                 else:
                     la = int(t.p)
                 sv = (

@@ -34,10 +34,10 @@ def prune_triples(
     o_of = g.triples[:, 2]
     for v, a, w in soi.pattern_edges:
         if isinstance(a, str):
-            if g.label_names is None or a not in g.label_names:
+            la = g.label_index().get(a) if g.label_names is not None else None
+            if la is None:
                 per_edge.append(0)
                 continue
-            la = g.label_names.index(a)
         else:
             la = int(a)
         sel = label_of == la

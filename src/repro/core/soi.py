@@ -247,25 +247,28 @@ class CompiledSOI:
 
 
 def compile_soi(
-    soi: SOI, g: Graph, node_index: dict[str, int] | None = None
+    soi: SOI,
+    g: Graph,
+    node_index: dict[str, int] | None = None,
+    label_index: dict[str, int] | None = None,
 ) -> CompiledSOI:
     """Lower ``soi`` against ``g``.
 
-    ``node_index`` maps node name -> id; callers that already hold one (the
-    engine does) pass it down so constants resolve in O(1) instead of an
-    O(n_nodes) ``list.index`` scan per constant.  Built on demand otherwise.
+    ``node_index`` / ``label_index`` map names -> ids; callers that already
+    hold them (the engine does) pass them down so constants and labels
+    resolve in O(1) instead of an O(n) ``list.index`` scan each.  Falls back
+    to the graph's own cached indexes otherwise.
     """
     assert g.label_names is not None or all(
         isinstance(a, int) for (_, _, a, _) in soi.edge_ineqs
     ), "graph must carry label names (or SOI labels must be int ids)"
+    if label_index is None and g.label_names is not None:
+        label_index = g.label_index()
 
     def lid(a) -> int | None:
         if isinstance(a, int):
             return a if a < g.n_labels else None
-        try:
-            return g.label_names.index(a)  # type: ignore[union-attr]
-        except ValueError:
-            return None  # label absent from the database
+        return label_index.get(a)  # None = label absent from the database
 
     n = g.n_nodes
     init = np.ones((soi.n_vars, n), dtype=bool)
@@ -283,11 +286,7 @@ def compile_soi(
 
     # constants: singleton sets.
     if node_index is None and any(c is not None for c in soi.is_const):
-        node_index = (
-            {name: i for i, name in enumerate(g.node_names)}
-            if g.node_names is not None
-            else {}
-        )
+        node_index = g.node_index() if g.node_names is not None else {}
     for i, c in enumerate(soi.is_const):
         if c is None:
             continue

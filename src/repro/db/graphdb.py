@@ -63,7 +63,16 @@ class GraphDB:
         cache_capacity: int = 64,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         backend: str | None = None,
+        mesh=None,
+        n_blocks: int | None = None,
     ):
+        """``engine`` picks the fixpoint engine ("auto" = cost-based):
+        dense / packed / sparse / jacobi_packed / partitioned.  ``mesh`` is
+        a ``jax.sharding.Mesh`` (see :func:`repro.distributed.ctx.node_mesh`)
+        the partitioned engine shards chi's node axis over; with a mesh of
+        >= 2 devices, engine="auto" selects "partitioned" once the graph
+        outgrows single-shard budgets.  ``n_blocks`` overrides the number of
+        destination blocks (default: one per mesh device)."""
         if graph is None:
             graph = _empty_graph()
         if graph.node_names is None or graph.label_names is None:
@@ -84,6 +93,8 @@ class GraphDB:
             cache_capacity=cache_capacity,
             buckets=buckets,
             backend=backend,
+            mesh=mesh,
+            n_blocks=n_blocks,
         )
 
     @classmethod

@@ -85,7 +85,11 @@ class Session:
         self._pending: list[
             tuple[ResultFuture, tuple[Query, TemplateInstance | None]]
         ] = []
-        self._group_counts: dict[str, int] = {}
+        # per template key: the *unique* constant tuples pending.  Duplicate
+        # submits share one instance slot in the microbatch (the batcher
+        # dedups before chunking), so only unique tuples count toward the
+        # bucket cap — N identical submits never force an early flush.
+        self._group_consts: dict[str, set[tuple[str, ...]]] = {}
         self._deadline: float | None = None
         self._closed = False
         self.submitted = 0
@@ -118,11 +122,11 @@ class Session:
         if self._deadline is None:
             self._deadline = now + self.max_delay_ms / 1e3
         if inst is not None:
-            # same template key => same microbatch; count toward its cap
-            key = inst.template.key
-            n = self._group_counts.get(key, 0) + 1
-            self._group_counts[key] = n
-            if n >= self.max_pending:
+            # same template key => same microbatch; unique constant tuples
+            # count toward its cap (duplicates ride an existing slot)
+            seen = self._group_consts.setdefault(inst.template.key, set())
+            seen.add(inst.constants)
+            if len(seen) >= self.max_pending:
                 self.flush()
                 return fut
         if now >= self._deadline:
@@ -138,7 +142,7 @@ class Session:
             self._deadline = None
             return 0
         pending, self._pending = self._pending, []
-        self._group_counts.clear()
+        self._group_consts.clear()
         self._deadline = None
         results = self._db._execute_prepared([prep for _, prep in pending])
         for (fut, _), rs in zip(pending, results):
@@ -163,7 +167,7 @@ class Session:
             # an exception unwound the block: drop pending work unresolved
             # rather than masking the error with a flush that may also fail
             self._pending.clear()
-            self._group_counts.clear()
+            self._group_consts.clear()
             self._deadline = None
             self._closed = True
 

@@ -1,20 +1,62 @@
-"""Logical-axis sharding context.
+"""Logical-axis sharding context and mesh construction.
 
 Model code annotates tensors with *logical* axes (``batch``, ``vocab``,
 ``expert``, ...); the launcher activates a mapping to physical mesh axes
 around tracing (``with logical_axis_rules(mesh): jit(...).lower(...)``).
 Outside the context every annotation is a no-op, so the same model code runs
 unsharded on CPU tests and fully sharded in the production dry-run.
+
+:func:`node_mesh` builds the 1-D device mesh the partitioned dual-simulation
+engine shards chi's node axis over (DESIGN.md Sect. 7);
+:func:`force_host_device_count` simulates a multi-device host for CPU tests
+and benchmarks.
 """
 from __future__ import annotations
 
 import contextlib
+import os
 import threading
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 _STATE = threading.local()
+
+NODE_AXIS = "nodes"  # mesh axis name chi's node dimension shards over
+
+
+def force_host_device_count(n: int) -> None:
+    """Ask XLA to split the host CPU into ``n`` simulated devices.
+
+    Only effective when called BEFORE the first JAX computation initializes
+    the backend (XLA reads ``XLA_FLAGS`` at client construction); a no-op
+    if the flag is already set, so exported ``XLA_FLAGS`` wins.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+
+
+def node_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over the local devices for the partitioned fixpoint engine.
+
+    The single axis (:data:`NODE_AXIS`) carries chi's node dimension; edge
+    blocks are placed block-major along it so segment reductions stay
+    device-local and the only cross-shard traffic is the packed frontier
+    broadcast (one ``n/8``-byte collective per sweep).
+    """
+    devices = jax.devices()
+    n = n_devices if n_devices is not None else len(devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} (or call "
+            "force_host_device_count before the first JAX computation)"
+        )
+    return Mesh(np.asarray(devices[:n]), (NODE_AXIS,))
 
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),

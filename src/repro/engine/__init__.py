@@ -16,8 +16,10 @@ whose jitted fixpoint takes the per-request constant rows as an *input*
 with zero SOI recompilation and zero jit retraces (:mod:`cache`).  Groups of
 same-template requests are solved as one disjoint-union SOI, padded to
 bucketed batch sizes so traces are reused (:mod:`batcher`), and the fixpoint
-engine (dense / packed / sparse) is chosen per plan by a cost model
-(:mod:`cost`) instead of a hard-coded flag.
+engine (dense / packed / sparse / jacobi_packed / partitioned) is chosen per
+plan by a communication-aware cost model (:mod:`cost`) instead of a
+hard-coded flag.  ``Engine(db, mesh=...)`` shards the partitioned engine's
+chi over a device mesh (DESIGN.md Sect. 7).
 """
 import warnings
 

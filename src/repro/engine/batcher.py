@@ -110,18 +110,24 @@ class MicroBatcher:
     def drain(self) -> Iterator[Microbatch]:
         """Yield microbatches (FIFO within a template) and empty the queues.
 
-        The bucket is sized for the *unique* constant tuples in the chunk —
-        duplicate requests share an instance slot at execution — so it names
-        the (template, bucket) plan the executor will actually use.
+        Requests are deduplicated by constant tuple *before* chunking:
+        duplicate submits share one instance slot at execution, so they must
+        not consume chunk capacity — 20 identical submits at cap 16 are ONE
+        solve, not two.  Chunks hold up to ``max(buckets)`` unique tuples
+        (FIFO by first occurrence) and the bucket is sized for that unique
+        count, naming the (template, bucket) plan the executor will use.
         """
         cap = max(self.buckets)
         for key, queue in self._queues.items():
-            for s in range(0, len(queue), cap):
-                chunk = queue[s : s + cap]
-                uniq = {inst.constants for _, inst in chunk}
+            groups: dict[tuple[str, ...], list[tuple[int, TemplateInstance]]] = {}
+            for idx, inst in queue:
+                groups.setdefault(inst.constants, []).append((idx, inst))
+            uniq = list(groups.values())
+            for s in range(0, len(uniq), cap):
+                chunk = uniq[s : s + cap]
                 yield Microbatch(
                     template_key=key,
-                    requests=chunk,
-                    bucket=bucket_for(len(uniq), self.buckets),
+                    requests=[r for grp in chunk for r in grp],
+                    bucket=bucket_for(len(chunk), self.buckets),
                 )
         self._queues.clear()

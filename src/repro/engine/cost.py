@@ -1,4 +1,4 @@
-"""Cost-based fixpoint-engine selection (DESIGN.md 5.3).
+"""Cost-based fixpoint-engine selection (DESIGN.md 5.3 / 7.2).
 
 Replaces the hard-coded ``--engine`` flag: given the database statistics and
 the compiled SOI, estimate the per-sweep work of each batched engine in
@@ -9,7 +9,7 @@ slow, never incorrect.
 
 Per-sweep model (arbitrary units; V = SOI variables, n = nodes, M = distinct
 (label, direction) operators, E = total edges touched by the SOI's
-operators):
+operators, W = devices in the mesh):
 
 * ``dense``  — M boolean matmuls: ``V * n * n * M`` elements at matmul
   efficiency ``C_DENSE`` (MXU/BLAS amortization).  Infeasible when the
@@ -19,7 +19,21 @@ operators):
   model charges a large penalty (packed is an accelerator engine).
 * ``sparse`` — gather + segment_max message passing: ``V * E`` messages at
   scatter-regime cost, plus the per-operator AND-apply over ``V * n``.
-  Always feasible; the only engine at DB scale.
+  Always feasible on one device.  Under Gauss–Seidel every operator
+  re-gathers the freshly-updated chi, so on a mesh it pays M chi-sized
+  collectives (``M * V * n`` bytes) per sweep.
+* ``jacobi_packed`` — same edge work, but all M operators read ONE
+  bit-packed broadcast of chi per sweep (``V * n / 8`` bytes); pays a
+  ~2x sweep-count inflation (Jacobi vs Gauss–Seidel, measured in
+  ``configs/dualsim_base.py``).
+* ``partitioned`` — jacobi_packed with destination-partitioned edge blocks:
+  compute divides across the W shards, cross-shard traffic stays the one
+  packed broadcast.  Needs a mesh (infeasible at W = 1, where it only adds
+  block-padding overhead over jacobi_packed).
+
+Communication terms enter only when ``n_devices > 1`` — on a single device
+there is no collective traffic and the model must reduce to the PR-1
+single-shard model exactly.
 """
 from __future__ import annotations
 
@@ -30,7 +44,7 @@ import jax
 from repro.core.graph import Graph
 from repro.core.soi import CompiledSOI
 
-ENGINES = ("dense", "packed", "sparse")
+ENGINES = ("dense", "packed", "sparse", "jacobi_packed", "partitioned")
 
 # model constants (relative cost per element)
 C_DENSE = 1.0 / 8.0  # matmul elements amortize on MXU/BLAS
@@ -39,6 +53,8 @@ C_PACKED_INTERPRET = 256.0  # per word under interpret mode (CPU backend)
 PACKED_LAUNCH = 65536.0  # per-operator kernel launch overhead
 C_SPARSE = 4.0  # per edge message (gather + segment_max)
 C_APPLY = 0.5  # per chi element per operator (AND-apply)
+C_COMM = 8.0  # per byte of cross-shard collective traffic
+JACOBI_SWEEP_FACTOR = 2.0  # Jacobi needs ~2x the sweeps of Gauss–Seidel
 DENSE_MAX_BYTES = 2 << 30  # stacked bool[M, n, n] adjacency budget
 PACKED_MAX_BYTES = 2 << 30
 
@@ -60,13 +76,23 @@ def _soi_stats(g: Graph, c: CompiledSOI) -> tuple[int, int, int]:
 
 
 def estimate_costs(
-    g: Graph, c: CompiledSOI, *, backend: str | None = None
+    g: Graph,
+    c: CompiledSOI,
+    *,
+    backend: str | None = None,
+    n_devices: int = 1,
 ) -> dict[str, float]:
-    """Per-sweep model cost of every engine (``inf`` when infeasible)."""
+    """Per-sweep model cost of every engine (``inf`` when infeasible).
+
+    ``n_devices`` is the mesh size the sharded engines would run on: it
+    divides the partitioned engine's compute and switches the communication
+    terms on (single-device runs have no collective traffic).
+    """
     backend = backend or jax.default_backend()
     v, m, e = _soi_stats(g, c)
     n = g.n_nodes
     n_words = (n + 31) // 32
+    multi = n_devices > 1
 
     costs: dict[str, float] = {}
     dense_bytes = m * n * n
@@ -82,7 +108,19 @@ def estimate_costs(
         if packed_bytes > PACKED_MAX_BYTES
         else v * n * n_words * m * c_packed + m * PACKED_LAUNCH
     )
-    costs["sparse"] = v * e * C_SPARSE + v * n * m * C_APPLY
+    edge_work = v * e * C_SPARSE + v * n * m * C_APPLY
+    # Gauss–Seidel re-gathers chi per operator: M chi-sized collectives/sweep
+    sparse_comm = m * v * n * C_COMM if multi else 0.0
+    costs["sparse"] = edge_work + sparse_comm
+    # Jacobi: ONE n/8-byte packed broadcast serves all M operators per sweep,
+    # at ~2x the sweep count
+    bcast_comm = v * (n / 8.0) * C_COMM if multi else 0.0
+    costs["jacobi_packed"] = JACOBI_SWEEP_FACTOR * (edge_work + bcast_comm)
+    costs["partitioned"] = (
+        JACOBI_SWEEP_FACTOR * (edge_work / n_devices + bcast_comm)
+        if multi
+        else float("inf")  # no mesh: pure overhead over jacobi_packed
+    )
     return costs
 
 
@@ -91,10 +129,11 @@ def choose_engine(
     c: CompiledSOI,
     *,
     backend: str | None = None,
+    n_devices: int = 1,
     allow: tuple[str, ...] = ENGINES,
 ) -> CostEstimate:
-    """Pick the cheapest feasible engine for this (SOI, graph) pair."""
-    costs = estimate_costs(g, c, backend=backend)
+    """Pick the cheapest feasible engine for this (SOI, graph, mesh) triple."""
+    costs = estimate_costs(g, c, backend=backend, n_devices=n_devices)
     feasible = {k: v for k, v in costs.items() if k in allow and v != float("inf")}
     if not feasible:  # sparse is always feasible unless excluded by `allow`
         raise ValueError(f"no feasible engine among {allow}")
@@ -102,7 +141,7 @@ def choose_engine(
     v, m, e = _soi_stats(g, c)
     reason = (
         f"{best}: cost {feasible[best]:.3g} over "
-        f"{{V={v}, n={g.n_nodes}, M={m}, E={e}}} "
+        f"{{V={v}, n={g.n_nodes}, M={m}, E={e}, W={n_devices}}} "
         f"(candidates: "
         + ", ".join(f"{k}={costs[k]:.3g}" for k in costs)
         + ")"

@@ -68,10 +68,25 @@ class EngineMetrics:
 
 
 def graph_fingerprint(g: Graph) -> str:
-    """Content hash binding cached plans to one database state."""
+    """Content hash binding cached plans to one database state.
+
+    The name dictionaries are part of the state: two snapshots with
+    identical int arrays but different ``node_names``/``label_names``
+    encodings are *different* databases (constants resolve to different
+    ids), so they must not share plans.
+    """
     h = hashlib.blake2b(digest_size=12)
     h.update(np.ascontiguousarray(g.triples).tobytes())
     h.update(f"{g.n_nodes}/{g.n_labels}".encode())
+    for names in (g.node_names, g.label_names):
+        # length-prefix each list so the node/label boundary is unambiguous
+        # (['a','bc']/['d'] must not collide with ['a','b']/['cd'])
+        if names is None:
+            h.update(b"\x00")
+        else:
+            h.update(f"{len(names)}\x1e".encode())
+            h.update("\x1f".join(names).encode())
+            h.update(b"\x1e")
     return h.hexdigest()
 
 
@@ -86,6 +101,8 @@ class Engine:
         cache_capacity: int = 64,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         backend: str | None = None,
+        mesh=None,
+        n_blocks: int | None = None,
     ):
         # ``db`` is either an immutable core Graph or a mutable source with
         # (graph, version, fingerprint, node_index) — i.e. repro.db.GraphDB.
@@ -95,6 +112,27 @@ class Engine:
         self.engine_pref = engine
         self.buckets = tuple(sorted(buckets))
         self.backend = backend
+        # mesh: a jax.sharding.Mesh (see repro.distributed.ctx.node_mesh).
+        # Plans shard chi's node axis across it and the cost model sees its
+        # size, so engine="auto" can pick "partitioned" once the graph
+        # outgrows single-shard budgets.  n_blocks defaults to the mesh size
+        # (one destination block per device).
+        self.mesh = mesh
+        self.n_devices = int(mesh.devices.size) if mesh is not None else 1
+        # without a mesh the partitioned engine still runs (single-device,
+        # block-structured); 4 blocks keeps the layout non-degenerate
+        self.n_blocks = (
+            n_blocks
+            if n_blocks is not None
+            else (self.n_devices if mesh is not None else 4)
+        )
+        # a mesh-shape token in the plan key: an Engine's mesh is fixed, but
+        # cache keys must stay unambiguous if a cache is ever shared/dumped
+        self._mesh_key = (
+            (tuple(mesh.axis_names), tuple(mesh.devices.shape))
+            if mesh is not None
+            else None
+        )
         self.cache = PlanCache(cache_capacity)
         # (engine, mats) -> device adjacency, shared across plans; bounded so
         # a churning template mix cannot pin unbounded device memory
@@ -107,9 +145,7 @@ class Engine:
             self.fingerprint = graph_fingerprint(self.db)
             self._version = None
             self._node_index = (
-                {n: i for i, n in enumerate(self.db.node_names)}
-                if self.db.node_names is not None
-                else {}
+                self.db.node_index() if self.db.node_names is not None else {}
             )
         self._prev_db: Graph = self.db  # adjacency retention window
         self._requests = 0
@@ -157,19 +193,25 @@ class Engine:
     # plan access
     # ------------------------------------------------------------------ #
     def plan_for(
-        self, instance_or_template, bucket: int = 1
+        self, instance_or_template, bucket: int = 1, *, _refresh: bool = True
     ) -> tuple[CompiledPlan, bool]:
         """Fetch (or build) the plan for a template at one batch bucket.
 
-        Returns ``(plan, cache_hit)``.
+        Returns ``(plan, cache_hit)``.  ``_refresh=False`` is the internal
+        mid-batch path: the snapshot was already pinned at the batch
+        boundary and must not move under in-flight requests.
         """
-        self.refresh()
+        if _refresh:
+            self.refresh()
         template = (
             instance_or_template.template
             if isinstance(instance_or_template, TemplateInstance)
             else instance_or_template
         )
-        key = (template.key, self.fingerprint, bucket, self.engine_pref)
+        key = (
+            template.key, self.fingerprint, bucket, self.engine_pref,
+            self.n_blocks, self._mesh_key,
+        )
         hit = key in self.cache
         plan = self.cache.get_or_build(
             key,
@@ -181,6 +223,8 @@ class Engine:
                 node_index=self._node_index,
                 backend=self.backend,
                 adj_cache=self._adj_cache,
+                mesh=self.mesh,
+                n_blocks=self.n_blocks,
             ),
         )
         return plan, hit
@@ -190,8 +234,15 @@ class Engine:
     # ------------------------------------------------------------------ #
     def execute(self, query: str | Query) -> ExecResult:
         """Run one query end-to-end (parse → plans → solve → prune)."""
-        t0 = time.perf_counter()
         self.refresh()
+        return self._execute_pinned(query)
+
+    def _execute_pinned(self, query: str | Query) -> ExecResult:
+        """``execute`` against the already-adopted snapshot (no refresh):
+        the mid-batch path of :meth:`execute_prepared`, where every request
+        of one call must see one graph version even if the source mutates
+        concurrently."""
+        t0 = time.perf_counter()
         q, t_parse = self._parse(query)
         parts = sparql.union_split(q)
         partials = []
@@ -229,7 +280,13 @@ class Engine:
     def execute_prepared(
         self, prepared: Sequence[tuple[Query, TemplateInstance | None]]
     ) -> list[ExecResult]:
-        """Run requests already split by :meth:`prepare`."""
+        """Run requests already split by :meth:`prepare`.
+
+        The snapshot is pinned ONCE here: every request of the call —
+        microbatched and multipart (UNION) alike — executes against the
+        same graph version, even when the source database mutates while
+        the batch is in flight.
+        """
         self.refresh()
         results: list[ExecResult | None] = [None] * len(prepared)
         batcher = MicroBatcher(self.buckets)
@@ -252,8 +309,10 @@ class Engine:
                 res.timings["total"] = share
                 results[idx] = res
         for idx, q in multipart:
-            results[idx] = self.execute(q)
-        self._requests += len(prepared) - len(multipart)  # execute() counted the rest
+            # NOT self.execute(): that would refresh() mid-batch and let one
+            # execute_many call mix two graph versions under mutation
+            results[idx] = self._execute_pinned(q)
+        self._requests += len(prepared) - len(multipart)  # _execute_pinned counted the rest
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------ #
@@ -278,7 +337,8 @@ class Engine:
         bindings = uniq + [uniq[-1]] * (bucket - len(uniq))  # pad: repeat last
 
         t = time.perf_counter()
-        plan, hit = self.plan_for(requests[0][1].template, bucket)
+        # snapshot already pinned by the caller (execute/execute_prepared)
+        plan, hit = self.plan_for(requests[0][1].template, bucket, _refresh=False)
         t_plan = time.perf_counter() - t
 
         t = time.perf_counter()

@@ -37,6 +37,26 @@ from .batcher import BatchLayout, batch_layout
 from .template import QueryTemplate, slot_index
 
 
+def _shard_partitioned_operands(
+    ops: dualsim.Operands, mesh: jax.sharding.Mesh, chi_spec
+) -> dualsim.Operands:
+    """Place partitioned operands on the mesh: edge blocks [W, Eb] shard
+    block-major along the mesh (block w lives where chi block w lives, so
+    every segment reduction is device-local), init shards like chi.  A
+    device_put onto the sharding an array already has is a no-op, so cached
+    edge blocks are not re-copied across plans."""
+    block = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(mesh.axis_names, None)
+    )
+    put = lambda xs: tuple(jax.device_put(x, block) for x in xs)
+    return dataclasses.replace(
+        ops,
+        init=jax.device_put(ops.init, chi_spec),
+        edge_src_b=put(ops.edge_src_b),
+        edge_dst_b=put(ops.edge_dst_b),
+    )
+
+
 @dataclasses.dataclass
 class PlanMetrics:
     """Observable counters for the zero-recompile acceptance test."""
@@ -59,18 +79,28 @@ class CompiledPlan:
         node_index: dict[str, int] | None = None,
         backend: str | None = None,
         adj_cache: dict | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        n_blocks: int | None = None,
     ):
         t0 = time.perf_counter()
         backend = backend or jax.default_backend()
         self.template = template
         self.batch = batch
         self.n_nodes = db.n_nodes
-        if node_index is None:
-            node_index = (
-                {n: i for i, n in enumerate(db.node_names)}
-                if db.node_names is not None
-                else {}
+        self.mesh = mesh
+        n_devices = int(mesh.devices.size) if mesh is not None else 1
+        self.n_blocks = n_blocks if n_blocks is not None else max(n_devices, 1)
+        # chi is [V, n]: shard the node axis across every mesh axis; the
+        # V axis (variables) stays replicated — it is tiny and irregular
+        self.chi_spec = (
+            jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(None, mesh.axis_names)
             )
+            if mesh is not None
+            else None
+        )
+        if node_index is None:
+            node_index = db.node_index() if db.node_names is not None else {}
         self._node_index = node_index
 
         base = soi_mod.build_soi(template.query)
@@ -110,7 +140,9 @@ class CompiledPlan:
 
         self.cost: cost_mod.CostEstimate | None = None
         if engine == "auto":
-            self.cost = cost_mod.choose_engine(db, self.csoi, backend=backend)
+            self.cost = cost_mod.choose_engine(
+                db, self.csoi, backend=backend, n_devices=n_devices
+            )
             engine = self.cost.engine
         self.engine = engine
 
@@ -127,19 +159,45 @@ class CompiledPlan:
         elif engine == "sparse":
             self.operands = dualsim.make_sparse_operands(self.csoi, db, adj_cache)
             solver = dualsim.solve_sparse
+        elif engine == "jacobi_packed":
+            self.operands = dualsim.make_sparse_operands(self.csoi, db, adj_cache)
+            solver = functools.partial(
+                dualsim.solve_sparse,
+                mode="jacobi_packed",
+                chi_spec=self.chi_spec,
+            )
+        elif engine == "partitioned":
+            self.operands = dualsim.make_partitioned_operands(
+                self.csoi, db, self.n_blocks, adj_cache
+            )
+            if mesh is not None and self.n_blocks % n_devices == 0:
+                self.operands = _shard_partitioned_operands(
+                    self.operands, mesh, self.chi_spec
+                )
+            solver = functools.partial(
+                dualsim.solve_partitioned, chi_spec=self.chi_spec
+            )
         else:
             raise ValueError(f"unknown engine {engine!r}")
 
         self.metrics = PlanMetrics()
         scatter = jnp.asarray(self._scatter_ids)
+        n_nodes = self.n_nodes
 
         def _run(ops: dualsim.Operands, const_rows: jax.Array):
             # executes at trace time only: the counter observes retraces
             self.metrics.traces += 1
             init = ops.init
             if const_rows.shape[0]:
+                if const_rows.shape[-1] != init.shape[-1]:
+                    # partitioned layout: init is block-padded past n_nodes
+                    const_rows = jnp.pad(
+                        const_rows,
+                        ((0, 0), (0, init.shape[-1] - const_rows.shape[-1])),
+                    )
                 init = init.at[scatter].set(init[scatter] & const_rows)
-            return solver(dataclasses.replace(ops, init=init))
+            chi, sweeps = solver(dataclasses.replace(ops, init=init))
+            return chi[:, :n_nodes], sweeps
 
         self._run = jax.jit(_run)
         self.metrics.build_seconds = time.perf_counter() - t0
@@ -171,7 +229,10 @@ class CompiledPlan:
                     f"template needs {self.template.n_slots}"
                 )
             node = self._node_index.get(bindings[i][k])
-            if node is not None:
+            # the index may be a live dict shared with a mutating source;
+            # a name minted after this plan's snapshot has an id past our
+            # node axis and (correctly) binds to the empty set here
+            if node is not None and node < self.n_nodes:
                 rows[j, node] = True
         return rows
 

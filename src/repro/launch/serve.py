@@ -10,7 +10,12 @@ jitted-fixpoint *inputs* (zero recompiles, zero retraces).  With
 versioned plan invalidation: stale plans rebuild lazily and the metrics
 line reports exactly how many were invalidated.
 
+With ``--engine partitioned --devices 8`` the fixpoint shards over 8
+simulated host devices (one destination block per device; cross-shard
+traffic is one packed chi broadcast per sweep — DESIGN.md Sect. 7):
+
     PYTHONPATH=src python -m repro.launch.serve --requests 32 --mutate
+    PYTHONPATH=src python -m repro.launch.serve --engine partitioned --devices 8
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ import numpy as np
 
 from repro.data import synth
 from repro.db import GraphDB
+from repro.distributed import ctx as dctx
 
 QUERY = "{{ ?d subOrganizationOf {uni} . ?s memberOf ?d }}"
 
@@ -32,14 +38,26 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-delay-ms", type=float, default=50.0)
     ap.add_argument("--engine", default="auto",
-                    choices=["auto", "sparse", "dense", "packed"],
+                    choices=["auto", "sparse", "dense", "packed",
+                             "jacobi_packed", "partitioned"],
                     help="fixpoint engine; 'auto' = cost-based selection")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard over a mesh of this many (simulated host) "
+                         "devices; 0 = no mesh")
     ap.add_argument("--mutate", action="store_true",
                     help="insert triples mid-stream to demo invalidation")
     args = ap.parse_args()
 
-    db = GraphDB(synth.lubm_like(n_universities=8, seed=0), engine=args.engine)
-    print(f"database: {db.n_triples} triples / {db.n_nodes} nodes")
+    mesh = None
+    if args.devices > 1:
+        # must run before the first JAX computation initializes the backend
+        dctx.force_host_device_count(args.devices)
+        mesh = dctx.node_mesh(args.devices)
+
+    db = GraphDB(synth.lubm_like(n_universities=8, seed=0),
+                 engine=args.engine, mesh=mesh)
+    print(f"database: {db.n_triples} triples / {db.n_nodes} nodes"
+          + (f", mesh of {args.devices} devices" if mesh is not None else ""))
 
     unis = [n for n in db.graph.node_names if n.startswith("Univ")]
     rng = np.random.default_rng(0)

@@ -118,6 +118,67 @@ def test_mutation_invalidates_plans_precisely(db):
                           _direct_mask(sparql.parse(qa), db.graph))
 
 
+def test_fingerprint_includes_name_dictionaries():
+    # identical int arrays under different dictionary encodings are
+    # DIFFERENT databases: constants resolve to different ids, so their
+    # plans must never collide in the cache
+    from repro.core.graph import Graph
+    from repro.engine.engine import graph_fingerprint
+
+    tr = np.asarray([[0, 0, 1]], np.int32)
+    g1 = Graph(2, 1, tr, node_names=["a", "b"], label_names=["p"])
+    g2 = Graph(2, 1, tr, node_names=["b", "a"], label_names=["p"])
+    g3 = Graph(2, 1, tr, node_names=["a", "b"], label_names=["q"])
+    g4 = Graph(2, 1, tr.copy(), node_names=["a", "b"], label_names=["p"])
+    assert graph_fingerprint(g1) != graph_fingerprint(g2)
+    assert graph_fingerprint(g1) != graph_fingerprint(g3)
+    assert graph_fingerprint(g1) == graph_fingerprint(g4)
+    # the node/label list boundary must be unambiguous too
+    g5 = Graph(2, 1, tr, node_names=["a", "bc"], label_names=["d"])
+    g6 = Graph(2, 1, tr, node_names=["a", "b"], label_names=["cd"])
+    assert graph_fingerprint(g5) != graph_fingerprint(g6)
+
+
+def test_execute_prepared_pins_one_snapshot():
+    # regression: UNION requests used to re-run refresh() mid-batch, so one
+    # execute_many call could mix two graph versions when the source mutated
+    # between the microbatched solves and the multipart tail.  Drive a
+    # direct (unlocked) Engine and mutate after the first microbatch.
+    from repro.engine import Engine
+
+    gdb = GraphDB(synth.lubm_like(n_universities=2, seed=0))
+    eng = Engine(gdb)
+    simple_q = MEMBERS_OF.format(uni="Univ0")
+    union_q = ("{ ?d subOrganizationOf Univ0 } UNION "
+               "{ ?d subOrganizationOf Univ1 }")
+    prepared = [eng.prepare(q) for q in (simple_q, union_q)]
+    snap = gdb.graph
+    expected = [_direct_mask(sparql.parse(q), snap)
+                for q in (simple_q, union_q)]
+
+    orig, fired = eng._solve_microbatch, []
+
+    def hooked(requests, bucket=None):
+        out = orig(requests, bucket=bucket)
+        if not fired:  # mutate the source mid-batch, exactly once
+            fired.append(True)
+            gdb.insert([("DeptMid", "subOrganizationOf", "Univ0"),
+                        ("SMid", "memberOf", "DeptMid")])
+        return out
+
+    eng._solve_microbatch = hooked
+    res = eng.execute_prepared(prepared)
+    for r, exp in zip(res, expected):
+        # every result reflects the snapshot pinned at call entry — none
+        # sees the mid-batch mutation (old behavior: the UNION tail
+        # refreshed and answered over snap.n_edges + 2 triples)
+        assert r.survivors.shape[0] == snap.n_edges
+        assert np.array_equal(r.survivors, exp)
+    # the next call adopts the mutation as usual
+    r2 = eng.execute(simple_q)
+    assert r2.survivors.shape[0] == snap.n_edges + 2
+
+
 def test_results_pin_their_snapshot(db):
     qa = MEMBERS_OF.format(uni="Univ0")
     r0 = db.query(qa)
@@ -141,6 +202,9 @@ def _submit_all(db, reqs, **kw):
 
 
 def test_session_microbatching_warm_zero_recompiles(db):
+    # 9 requests but only 2 distinct constant tuples: dedup happens BEFORE
+    # chunking, so the whole stream is ONE fixpoint solve (duplicates ride
+    # an existing instance slot and never consume bucket capacity)
     n, cap = 9, 4
     reqs = [MEMBERS_OF.format(uni=f"Univ{i % 2}") for i in range(n)]
     # warm pass builds every (template, bucket) plan the stream needs
@@ -152,9 +216,9 @@ def test_session_microbatching_warm_zero_recompiles(db):
 
     s, results = _submit_all(db, reqs, max_delay_ms=1e6, max_pending=cap)
     m1 = db.metrics()
-    # N same-template requests ride <= ceil(N / cap) fixpoint solves
-    assert m1.microbatches - m0.microbatches == math.ceil(n / cap) == 3
-    assert s.flushes == 3  # two cap-triggered + one at close
+    # 2 unique tuples < cap: no cap-triggered flush, one solve at close
+    assert m1.microbatches - m0.microbatches == 1
+    assert s.flushes == 1
     # zero recompiles and zero retraces on the warm template
     assert m1.cache.misses == m0.cache.misses
     assert plan2.metrics.traces == traces0
@@ -162,6 +226,20 @@ def test_session_microbatching_warm_zero_recompiles(db):
     # and every rider matches its one-shot result
     direct = _direct_mask(sparql.parse(reqs[0]), db.graph)
     assert np.array_equal(results[0].survivor_mask, direct)
+
+
+def test_session_cap_counts_unique_constants(db):
+    # distinct constants DO hit the cap: 4 unique tuples at cap 4 flush
+    # eagerly, ceil-batching the stream
+    n, cap = 9, 4
+    reqs = [MEMBERS_OF.format(uni=f"Univ{i}") for i in range(n)]
+    _submit_all(db, reqs, max_delay_ms=1e6, max_pending=cap)  # warm pass
+    m0 = db.metrics()
+    s, results = _submit_all(db, reqs, max_delay_ms=1e6, max_pending=cap)
+    m1 = db.metrics()
+    assert s.flushes == math.ceil(n / cap) == 3
+    assert m1.microbatches - m0.microbatches == 3
+    assert all(r.cache_hit for r in results)
 
 
 def test_session_deadline_admission(db):

@@ -6,6 +6,7 @@ The zero-recompile acceptance criterion is asserted here via cache and
 trace counters: a warm constant-rebound execute must not build a plan
 (cache.misses unchanged = no SOI recompilation) and must not retrace the
 jitted fixpoint (plan.metrics.traces unchanged)."""
+import jax
 import numpy as np
 import pytest
 
@@ -104,6 +105,35 @@ def test_cost_model_dense_infeasible_at_scale():
     assert est.engine == "sparse"
 
 
+def test_cost_model_partitioned_needs_a_mesh():
+    # single device: partitioned is pure block-padding overhead — infeasible
+    g = synth.random_graph(n_nodes=60_000, n_labels=2, n_edges=50_000, seed=0)
+    est = choose_engine(g, _compiled("{ ?a p0 ?b }", g), n_devices=1)
+    assert est.costs["partitioned"] == float("inf")
+    assert est.engine == "sparse"
+
+
+def test_cost_model_partitioned_on_mesh_at_scale():
+    # 8 devices + a graph past the dense budget: compute divides across the
+    # mesh and the packed broadcast beats M chi-sized gathers -> partitioned
+    g = synth.random_graph(n_nodes=60_000, n_labels=2, n_edges=50_000, seed=0)
+    c = _compiled("{ ?a p0 ?b }", g)
+    est = choose_engine(g, c, n_devices=8)
+    assert est.engine == "partitioned"
+    assert est.costs["partitioned"] < est.costs["sparse"]
+    # communication terms only exist on a mesh: Gauss-Seidel sparse pays M
+    # chi-sized collectives per sweep there, nothing on one device
+    single = choose_engine(g, c, n_devices=1)
+    assert est.costs["sparse"] > single.costs["sparse"]
+
+
+def test_cost_model_small_graph_stays_single_shard_on_mesh():
+    # a mesh alone must not flip tiny graphs off the dense engine
+    g = synth.random_graph(n_nodes=48, n_labels=2, n_edges=1500, seed=0)
+    est = choose_engine(g, _compiled("{ ?a p0 ?b . ?b p1 ?c }", g), n_devices=8)
+    assert est.engine == "dense"
+
+
 # --------------------------------------------------------------------- #
 # batcher
 # --------------------------------------------------------------------- #
@@ -124,6 +154,33 @@ def test_batched_soi_instance_boundaries():
     assert len(union.edge_ineqs) == 3 * len(s.edge_ineqs)
     # back-compat wrapper returns the same union
     assert batched_soi([s, s, s]).base == union.base
+
+
+def test_microbatcher_dedups_before_chunking():
+    # 20 duplicate submits at cap 16: ONE microbatch (bucket 1), not two —
+    # dedup by constants happens before chunking
+    mb = MicroBatcher(buckets=(1, 2, 4, 8, 16))
+    q = "{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }"
+    for i in range(20):
+        mb.add(i, canonicalize(sparql.parse(q)))
+    groups = list(mb.drain())
+    assert len(groups) == 1
+    assert groups[0].bucket == 1
+    assert len(groups[0].requests) == 20  # every rider still demuxes
+
+
+def test_microbatcher_chunks_by_unique_constants():
+    # 17 unique + 3 duplicate tuples at cap 16 -> chunks of 16 and 1 uniques
+    mb = MicroBatcher(buckets=(1, 2, 4, 8, 16))
+    reqs = [f"{{ ?d subOrganizationOf Univ{i} . ?s memberOf ?d }}"
+            for i in range(17)]
+    reqs += reqs[:3]
+    for i, q in enumerate(reqs):
+        mb.add(i, canonicalize(sparql.parse(q)))
+    groups = list(mb.drain())
+    assert [len({inst.constants for _, inst in g.requests}) for g in groups] \
+        == [16, 1]
+    assert sum(len(g.requests) for g in groups) == 20
 
 
 def test_microbatcher_groups_by_template():
@@ -231,12 +288,82 @@ def test_engine_matches_direct_path(lubm, qt):
     assert res.stats.n_after == int(res.survivors.sum())
 
 
-@pytest.mark.parametrize("engine", ["dense", "sparse", "packed"])
+@pytest.mark.parametrize(
+    "engine", ["dense", "sparse", "packed", "jacobi_packed", "partitioned"]
+)
 def test_engine_override_same_fixpoint(lubm, engine):
     qt = "{ ?d subOrganizationOf Univ1 . ?s memberOf ?d }"
     res = Engine(lubm, engine=engine).execute(qt)
     assert res.engine == engine
     assert np.array_equal(res.survivors, _direct_mask(sparql.parse(qt), lubm))
+
+
+def test_partitioned_warm_rebind_no_recompile_no_retrace(lubm):
+    """Acceptance: engine="partitioned" serves constant rebinds with zero
+    plan builds and zero jit retraces, like every other engine."""
+    eng = Engine(lubm, engine="partitioned")
+    r0 = eng.execute("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }")
+    assert not r0.cache_hit and r0.engine == "partitioned"
+    plan, _ = eng.plan_for(
+        canonicalize(sparql.parse("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }"))
+    )
+    builds, traces = eng.cache.misses, plan.metrics.traces
+    for uni in ["Univ1", "Univ2", "Univ0"]:
+        r = eng.execute(f"{{ ?q subOrganizationOf {uni} . ?m memberOf ?q }}")
+        assert r.cache_hit
+    assert eng.cache.misses == builds
+    assert plan.metrics.traces == traces
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs simulated devices: "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+def test_partitioned_engine_on_device_mesh(lubm):
+    """Multi-device CI job: the partitioned engine shards chi over a real
+    mesh (one destination block per device) and still matches the direct
+    single-shard pipeline."""
+    from repro.distributed import ctx as dctx
+
+    mesh = dctx.node_mesh()
+    eng = Engine(lubm, engine="partitioned", mesh=mesh)
+    assert eng.n_blocks == len(jax.devices())
+    qs = [f"{{ ?d subOrganizationOf {u} . ?s memberOf ?d }}"
+          for u in ("Univ0", "Univ1", "Univ2")]
+    for q in qs:
+        res = eng.execute(q)
+        assert res.engine == "partitioned"
+        assert np.array_equal(res.survivors, _direct_mask(sparql.parse(q), lubm))
+    # warm path stays zero-retrace on the mesh too
+    plan, hit = eng.plan_for(canonicalize(sparql.parse(qs[0])))
+    assert hit and plan.metrics.traces == 1
+    # chi's node axis is actually sharded across the mesh
+    assert plan.chi_spec is not None
+    assert plan.operands.edge_src_b[0].sharding.num_devices == len(jax.devices())
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs simulated devices: "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+def test_auto_picks_partitioned_on_mesh_past_dense_budget():
+    """Acceptance: auto + a >= 2-device mesh on a graph past the dense
+    budget serves through solve_partitioned, zero warm retraces."""
+    from repro.distributed import ctx as dctx
+
+    g = synth.random_graph(n_nodes=60_000, n_labels=2, n_edges=50_000, seed=0)
+    eng = Engine(g, engine="auto", mesh=dctx.node_mesh())
+    q = "{ ?a p0 ?b . ?b p1 ?a }"
+    r0 = eng.execute(q)
+    assert r0.engine == "partitioned" and not r0.cache_hit
+    plan, _ = eng.plan_for(canonicalize(sparql.parse(q)))
+    assert plan.cost is not None and plan.cost.engine == "partitioned"
+    traces = plan.metrics.traces
+    r1 = eng.execute(q)
+    assert r1.cache_hit and plan.metrics.traces == traces
+    assert np.array_equal(r0.survivors, r1.survivors)
 
 
 def test_execute_many_matches_execute(lubm):
