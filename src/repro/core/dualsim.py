@@ -177,20 +177,71 @@ def make_packed_operands(
     return Operands(adj_packed=adj, **_base_operands(c))
 
 
+# Per-operator edge lists round up to this capacity multiple; pad rows use
+# the out-of-range destination id ``n`` and are dropped by the segment
+# reduce.  Rounding keeps operand shapes stable under small insert/delete
+# deltas, so a patched plan re-runs its existing trace instead of retracing
+# (DESIGN.md Sect. 8).
+EDGE_PAD = 64
+
+
+def _padded_edge_list(
+    s: np.ndarray, t: np.ndarray, n: int, min_cap: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """(src, dst) int32 arrays padded to an ``EDGE_PAD`` multiple >= min_cap."""
+    e = len(s)
+    cap = max(-(-e // EDGE_PAD) * EDGE_PAD if e else 0, min_cap)
+    if cap == e:
+        return np.asarray(s, np.int32), np.asarray(t, np.int32)
+    ps = np.zeros(cap, np.int32)
+    pt = np.full(cap, n, np.int32)  # pad dst = n -> dropped by segment reduce
+    ps[:e], pt[:e] = s, t
+    return ps, pt
+
+
+def _oriented_edges(g: Graph, a: int, d: int) -> tuple[np.ndarray, np.ndarray]:
+    e = g.edges_for_label(a)
+    return (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
+
+
 def make_sparse_operands(
     c: CompiledSOI, g: Graph, adj_cache: dict | None = None
 ) -> Operands:
     def build():
         srcs, dsts = [], []
         for a, d in c.mats:
-            e = g.edges_for_label(a)
-            s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
+            s, t = _padded_edge_list(*_oriented_edges(g, a, d), g.n_nodes)
             srcs.append(jnp.asarray(s, jnp.int32))
             dsts.append(jnp.asarray(t, jnp.int32))
         return tuple(srcs), tuple(dsts)
 
     src, dst = _cached_adj(adj_cache, ("sparse", tuple(c.mats)), g, build)
     return Operands(edge_src=src, edge_dst=dst, **_base_operands(c))
+
+
+def _partitioned_mat(
+    s: np.ndarray, t: np.ndarray, n_blocks: int, n_local: int, min_eb: int = 1
+) -> tuple[np.ndarray, np.ndarray]:
+    """Destination-partitioned (block, local-dst) layout for one operator.
+
+    Blocks pad to a common edge count ``>= min_eb`` (pad rows use the
+    out-of-range local id ``n_local`` and are dropped by the segment
+    reduce); ``min_eb`` lets an operand patch keep the superseded shape so
+    the plan's trace stays valid.
+    """
+    blk = t // n_local
+    order = np.argsort(blk, kind="stable")
+    s, t, blk = s[order], t[order], blk[order]
+    counts = np.bincount(blk, minlength=n_blocks)
+    eb = max(int(counts.max()) if counts.size else 1, 1, min_eb)
+    src_b = np.zeros((n_blocks, eb), np.int32)
+    dst_b = np.full((n_blocks, eb), n_local, np.int32)  # pad -> dropped
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for w in range(n_blocks):
+        k = counts[w]
+        src_b[w, :k] = s[starts[w] : starts[w] + k]
+        dst_b[w, :k] = t[starts[w] : starts[w] + k] - w * n_local
+    return src_b, dst_b
 
 
 def padded_node_count(n: int, n_blocks: int) -> int:
@@ -222,20 +273,9 @@ def make_partitioned_operands(
     def build():
         srcs_b, dsts_b = [], []
         for a, d in c.mats:
-            e = g.edges_for_label(a)
-            s, t = (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
-            blk = t // n_local
-            order = np.argsort(blk, kind="stable")
-            s, t, blk = s[order], t[order], blk[order]
-            counts = np.bincount(blk, minlength=n_blocks)
-            eb = max(int(counts.max()), 1)
-            src_b = np.zeros((n_blocks, eb), np.int32)
-            dst_b = np.full((n_blocks, eb), n_local, np.int32)  # pad -> dropped
-            starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-            for w in range(n_blocks):
-                k = counts[w]
-                src_b[w, :k] = s[starts[w] : starts[w] + k]
-                dst_b[w, :k] = t[starts[w] : starts[w] + k] - w * n_local
+            src_b, dst_b = _partitioned_mat(
+                *_oriented_edges(g, a, d), n_blocks, n_local
+            )
             srcs_b.append(jnp.asarray(src_b))
             dsts_b.append(jnp.asarray(dst_b))
         return tuple(srcs_b), tuple(dsts_b)
@@ -247,6 +287,154 @@ def make_partitioned_operands(
     if n_pad != n:
         base["init"] = jnp.pad(base["init"], ((0, 0), (0, n_pad - n)))
     return Operands(edge_src_b=src_b, edge_dst_b=dst_b, **base)
+
+
+# --------------------------------------------------------------------- #
+# incremental maintenance: operand patching + destabilization closure
+# --------------------------------------------------------------------- #
+def patch_operands(
+    ops: Operands,
+    c_new: CompiledSOI,
+    g: Graph,
+    touched_labels: set[int],
+    *,
+    n_blocks: int = 4,
+    adj_cache: dict | None = None,
+) -> Operands:
+    """Patch device operands in place of a full rebuild (DESIGN.md Sect. 8).
+
+    Precondition: the delta from the operands' snapshot to ``g`` is
+    *shape-stable* (no new nodes or labels) and the SOI structure is
+    unchanged, so ``c_new.mats`` matches the old operator list and all
+    inequality tables stay valid.  Only operators whose label appears in
+    ``touched_labels`` are rebuilt against ``g``; untouched adjacency rows
+    and edge lists carry over from ``ops`` unchanged (their content is
+    identical by construction).  Sparse / partitioned edge lists keep their
+    superseded padded capacity whenever the new edge count still fits, so
+    patched operand *shapes* — and therefore the plan's jit trace — stay
+    stable.  The Eq.-13 ``init`` always refreshes (summaries shift with the
+    delta).  The shared ``adj_cache`` entry is re-keyed to ``g`` so sibling
+    plans (other batch buckets) pick the patched arrays up as a hit.
+    """
+    n = g.n_nodes
+    touched = [
+        m for m, (la, _) in enumerate(c_new.mats) if la in touched_labels
+    ]
+    init = jnp.asarray(c_new.init)
+    # the shared adjacency cache keys on graph identity, so a sibling plan
+    # that already patched against this same snapshot is a hit and the
+    # patch closure below never runs twice per (layout, mats, graph)
+    kw: dict = {}
+    if ops.adj_dense is not None:
+
+        def patch_dense():
+            adj = ops.adj_dense
+            if touched:
+                rows = np.stack(
+                    [
+                        g.dense_adjacency(c_new.mats[m][0],
+                                          backward=(c_new.mats[m][1] == BWD))
+                        for m in touched
+                    ]
+                )
+                adj = adj.at[jnp.asarray(touched)].set(jnp.asarray(rows))
+            return adj
+
+        kw["adj_dense"] = _cached_adj(
+            adj_cache, ("dense", tuple(c_new.mats)), g, patch_dense
+        )
+    elif ops.adj_packed is not None:
+
+        def patch_packed():
+            adj = ops.adj_packed
+            if touched:
+                rows = np.stack(
+                    [
+                        g.packed_adjacency(c_new.mats[m][0],
+                                           backward=(c_new.mats[m][1] == BWD))
+                        for m in touched
+                    ]
+                )
+                adj = adj.at[jnp.asarray(touched)].set(jnp.asarray(rows))
+            return adj
+
+        kw["adj_packed"] = _cached_adj(
+            adj_cache, ("packed", tuple(c_new.mats)), g, patch_packed
+        )
+    elif ops.edge_src_b is not None:
+        n_pad = padded_node_count(n, n_blocks)
+        n_local = n_pad // n_blocks
+        if n_pad != n:
+            init = jnp.pad(init, ((0, 0), (0, n_pad - n)))
+
+        def patch_blocks():
+            src_b, dst_b = list(ops.edge_src_b), list(ops.edge_dst_b)
+            for m in touched:
+                a, d = c_new.mats[m]
+                sb, db = _partitioned_mat(
+                    *_oriented_edges(g, a, d), n_blocks, n_local,
+                    min_eb=int(ops.edge_src_b[m].shape[1]),
+                )
+                src_b[m], dst_b[m] = jnp.asarray(sb), jnp.asarray(db)
+            return tuple(src_b), tuple(dst_b)
+
+        kw["edge_src_b"], kw["edge_dst_b"] = _cached_adj(
+            adj_cache, ("partitioned", tuple(c_new.mats), n_blocks), g,
+            patch_blocks,
+        )
+    else:
+
+        def patch_edges():
+            src, dst = list(ops.edge_src), list(ops.edge_dst)
+            for m in touched:
+                a, d = c_new.mats[m]
+                s, t = _padded_edge_list(
+                    *_oriented_edges(g, a, d), n,
+                    min_cap=int(ops.edge_src[m].shape[0]),
+                )
+                src[m], dst[m] = jnp.asarray(s), jnp.asarray(t)
+            return tuple(src), tuple(dst)
+
+        kw["edge_src"], kw["edge_dst"] = _cached_adj(
+            adj_cache, ("sparse", tuple(c_new.mats)), g, patch_edges
+        )
+    return dataclasses.replace(ops, init=init, **kw)
+
+
+def destabilized_rows(c: CompiledSOI, inserted_labels: set[int]) -> np.ndarray:
+    """SOI rows whose greatest solution can *grow* under an edge insertion.
+
+    Returns a ``bool[n_vars]`` mask.  Seed: the LHS of every inequality
+    whose operator carries an inserted label (their bound ``chi[rhs] x_b M``
+    gains columns — the Sect.-3.3 "destabilize dependents" trigger).  The
+    seed then closes transitively over the dependency direction *lhs
+    depends on rhs* (edge and copy inequalities alike): a row constrained
+    by a grown row can grow too.  Rows OUTSIDE the closure provably keep
+    ``gfp_new[row] <= gfp_old[row]`` — their whole constraint cone uses
+    untouched (or only shrunken) operators — which is the soundness
+    argument for re-seeding exactly the closure to ⊤ before a warm resume
+    (DESIGN.md Sect. 8.2).
+    """
+    touched_mats = {
+        m for m, (la, _) in enumerate(c.mats) if la in inserted_labels
+    }
+    grow = np.zeros(c.n_vars, dtype=bool)
+    if not touched_mats:
+        return grow
+    for lhs, m in zip(c.ineq_lhs, c.ineq_mat):
+        if int(m) in touched_mats:
+            grow[lhs] = True
+    deps = list(zip(c.ineq_lhs, c.ineq_rhs)) + list(
+        zip(c.copy_lhs, c.copy_rhs)
+    )
+    changed = True
+    while changed:
+        changed = False
+        for lhs, rhs in deps:
+            if grow[rhs] and not grow[lhs]:
+                grow[lhs] = True
+                changed = True
+    return grow
 
 
 # --------------------------------------------------------------------- #
@@ -331,11 +519,26 @@ def _packed_frontier(chi: jax.Array, chi_spec=None) -> jax.Array:
     return bitops.unpack(packed, chi.shape[-1])  # replicated bool [V, n]
 
 
+def _warm_init(ops: Operands, chi0: jax.Array | None) -> jax.Array:
+    """The sweep start point: Eq.-13 init, optionally warm-started.
+
+    ``chi0`` (a previous fixpoint, re-seeded by the caller where an
+    insertion may grow the solution — :func:`destabilized_rows`) is ANDed
+    into the init: every sweep only shrinks chi, so starting anywhere above
+    the greatest fixpoint converges to exactly that fixpoint, in far fewer
+    sweeps when ``chi0`` is already close (DESIGN.md Sect. 8.2).
+    """
+    if chi0 is None:
+        return ops.init
+    return jnp.logical_and(ops.init, chi0)
+
+
 def _fixpoint(
     propagate_m: Callable[[jax.Array, int], jax.Array],
     ops: Operands,
     max_sweeps: int | None,
     chi_spec=None,
+    chi0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Gauss–Seidel sweeps: one boolean product ``y = chi x_b M_m`` per
     operator m (all variables batched), AND-updates applied immediately —
@@ -348,13 +551,13 @@ def _fixpoint(
             chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
         return _apply_copies(chi, ops)
 
-    return _sweep_fixpoint(sweep, ops.init, max_sweeps, chi_spec)
+    return _sweep_fixpoint(sweep, _warm_init(ops, chi0), max_sweeps, chi_spec)
 
 
 @functools.partial(jax.jit, static_argnames=("dtype", "max_sweeps", "chi_spec"))
 def solve_dense(
     ops: Operands, *, dtype=jnp.float32, max_sweeps: int | None = None,
-    chi_spec=None,
+    chi_spec=None, chi0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sweeps with dense boolean matmuls on the MXU (OR-AND via (+,x), >0)."""
 
@@ -363,7 +566,7 @@ def solve_dense(
         y = x @ ops.adj_dense[m].astype(dtype)
         return y > 0
 
-    return _fixpoint(propagate_m, ops, max_sweeps, chi_spec)
+    return _fixpoint(propagate_m, ops, max_sweeps, chi_spec, chi0)
 
 
 @functools.partial(
@@ -371,7 +574,7 @@ def solve_dense(
 )
 def solve_packed(
     ops: Operands, *, max_sweeps: int | None = None, interpret: bool = True,
-    chi_spec=None,
+    chi_spec=None, chi0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sweeps over bit-packed adjacency via the Pallas bitmm kernel."""
     from repro.kernels.bitmm import ops as bitmm_ops
@@ -379,13 +582,13 @@ def solve_packed(
     def propagate_m(chi: jax.Array, m: int) -> jax.Array:
         return bitmm_ops.bitmm(chi, ops.adj_packed[m], interpret=interpret)
 
-    return _fixpoint(propagate_m, ops, max_sweeps, chi_spec)
+    return _fixpoint(propagate_m, ops, max_sweeps, chi_spec, chi0)
 
 
 @functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec", "mode"))
 def solve_sparse(
     ops: Operands, *, max_sweeps: int | None = None, chi_spec=None,
-    mode: str = "gs",
+    mode: str = "gs", chi0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Edge-list engine: gather + segment-max message passing (OR-AND).
 
@@ -411,7 +614,7 @@ def solve_sparse(
         return jnp.maximum(y, 0).T > 0  # [V, n]
 
     if mode == "gs":
-        return _fixpoint(propagate_from, ops, max_sweeps, chi_spec)
+        return _fixpoint(propagate_from, ops, max_sweeps, chi_spec, chi0)
     if mode != "jacobi_packed":
         raise ValueError(f"unknown sparse mode {mode!r}")
 
@@ -425,12 +628,13 @@ def solve_sparse(
             chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
         return _apply_copies(chi, ops)
 
-    return _sweep_fixpoint(sweep, ops.init, max_sweeps, chi_spec)
+    return _sweep_fixpoint(sweep, _warm_init(ops, chi0), max_sweeps, chi_spec)
 
 
 @functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec"))
 def solve_partitioned(
-    ops: Operands, *, max_sweeps: int | None = None, chi_spec=None
+    ops: Operands, *, max_sweeps: int | None = None, chi_spec=None,
+    chi0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Vertex-cut partitioned engine (beyond-paper, EXPERIMENTS §Perf).
 
@@ -462,7 +666,7 @@ def solve_partitioned(
             chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
         return _apply_copies(chi, ops)
 
-    return _sweep_fixpoint(sweep, ops.init, max_sweeps, chi_spec)
+    return _sweep_fixpoint(sweep, _warm_init(ops, chi0), max_sweeps, chi_spec)
 
 
 # --------------------------------------------------------------------- #
@@ -644,6 +848,7 @@ def solve_compiled(
     engine: str = "dense",
     dtype=jnp.float32,
     n_blocks: int = 4,
+    chi0: np.ndarray | None = None,
 ) -> tuple[np.ndarray, int]:
     """Solve a compiled SOI with the chosen engine; returns (chi, iters).
 
@@ -651,21 +856,69 @@ def solve_compiled(
     ``jacobi_packed`` (sparse with one packed frontier broadcast per sweep),
     ``partitioned`` (destination-partitioned edge blocks; ``n_blocks``
     shards, node axis auto-padded), ``worklist`` (numpy reference).
+
+    ``chi0`` warm-starts any batched engine from a previous fixpoint
+    (callers are responsible for the re-seeding rule — use
+    :func:`resume_fixpoint` for the safe high-level path).
     """
+    if chi0 is not None:
+        if engine == "worklist":
+            raise ValueError("the worklist engine does not take a warm start")
+        chi0 = jnp.asarray(chi0, dtype=bool)
     if engine == "dense":
-        chi, it = solve_dense(make_dense_operands(c, g), dtype=dtype)
+        chi, it = solve_dense(make_dense_operands(c, g), dtype=dtype, chi0=chi0)
     elif engine == "packed":
-        chi, it = solve_packed(make_packed_operands(c, g))
+        chi, it = solve_packed(make_packed_operands(c, g), chi0=chi0)
     elif engine == "sparse":
-        chi, it = solve_sparse(make_sparse_operands(c, g))
+        chi, it = solve_sparse(make_sparse_operands(c, g), chi0=chi0)
     elif engine == "jacobi_packed":
-        chi, it = solve_sparse(make_sparse_operands(c, g), mode="jacobi_packed")
+        chi, it = solve_sparse(
+            make_sparse_operands(c, g), mode="jacobi_packed", chi0=chi0
+        )
     elif engine == "partitioned":
         ops = make_partitioned_operands(c, g, n_blocks)
-        chi, it = solve_partitioned(ops)
+        if chi0 is not None and chi0.shape[-1] != ops.init.shape[-1]:
+            chi0 = jnp.pad(
+                chi0, ((0, 0), (0, ops.init.shape[-1] - chi0.shape[-1]))
+            )
+        chi, it = solve_partitioned(ops, chi0=chi0)
         chi = chi[:, : g.n_nodes]  # drop block-padding columns
     elif engine == "worklist":
         return solve_worklist(c, g)
     else:
         raise ValueError(f"unknown engine {engine!r}")
     return np.asarray(chi), int(it)
+
+
+def resume_fixpoint(
+    c: CompiledSOI,
+    g: Graph,
+    chi0: np.ndarray,
+    *,
+    inserted_labels: set[int] | frozenset[int] = frozenset(),
+    engine: str = "dense",
+    dtype=jnp.float32,
+    n_blocks: int = 4,
+) -> tuple[np.ndarray, int]:
+    """Warm-started fixpoint: resume from a previous snapshot's solution.
+
+    ``chi0`` is the greatest solution computed against the *previous* graph
+    snapshot; ``c`` is the SOI re-compiled against the mutated graph ``g``
+    (same SOI structure, new Eq.-13 init).  Correctness (DESIGN.md 8.2):
+
+    * **deletions only** — the greatest solution can only shrink, and every
+      sweep is monotone-decreasing, so resuming from ``chi0 ∧ init_new``
+      converges to exactly the new greatest fixpoint;
+    * **insertions** — rows in the :func:`destabilized_rows` closure of the
+      inserted labels are re-seeded to ⊤ (their fresh Eq.-13 init) first;
+      rows outside the closure provably cannot grow, so the re-seeded start
+      still dominates the new fixpoint.
+
+    Returns ``(chi, sweeps)`` bit-identical to a cold solve on ``g``.
+    """
+    chi0 = np.array(chi0, dtype=bool, copy=True)
+    if inserted_labels:
+        chi0[destabilized_rows(c, set(inserted_labels))] = True
+    return solve_compiled(
+        c, g, engine=engine, dtype=dtype, n_blocks=n_blocks, chi0=chi0
+    )

@@ -183,3 +183,95 @@ def subgraph_triples(g: Graph, triple_mask: np.ndarray) -> Graph:
         node_names=g.node_names,
         label_names=g.label_names,
     )
+
+
+# --------------------------------------------------------------------- #
+# deltas between snapshots (incremental maintenance; DESIGN.md Sect. 8)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """The difference between two consecutive graph snapshots.
+
+    A mutation source (``repro.db.GraphDB``) records one ``GraphDelta`` per
+    version bump; the engine composes them to decide whether a superseded
+    plan is *resumable* (dictionary and node axis unchanged — operands can
+    be patched in place and the old fixpoint warm-starts the new solve) or
+    *cold* (shape change: rebuild from scratch).  Triples are int id rows,
+    valid in both snapshots whenever :attr:`shape_stable` holds (ids are
+    stable across mutations; deletes never drop names).
+    """
+
+    inserted: np.ndarray  # (K, 3) int32 (src, label, dst) rows added
+    deleted: np.ndarray  # (K, 3) int32 rows removed
+    nodes_before: int
+    nodes_after: int
+    labels_before: int
+    labels_after: int
+
+    @property
+    def shape_stable(self) -> bool:
+        """True iff the dictionary did not grow: no new nodes or labels.
+
+        Shape-stable deltas keep every compiled operand shape (chi width,
+        dense/packed adjacency) and every name -> id mapping valid, which is
+        the precondition for patching a plan instead of rebuilding it.
+        """
+        return (
+            self.nodes_after == self.nodes_before
+            and self.labels_after == self.labels_before
+        )
+
+    @property
+    def has_insertions(self) -> bool:
+        """True iff the delta adds edges (the fixpoint may *grow*)."""
+        return len(self.inserted) > 0
+
+    @property
+    def n_changes(self) -> int:
+        """Total number of edge insertions + deletions."""
+        return len(self.inserted) + len(self.deleted)
+
+    def touched_labels(self) -> set[int]:
+        """Label ids with at least one inserted or deleted edge."""
+        out: set[int] = set()
+        if len(self.inserted):
+            out.update(int(x) for x in np.unique(self.inserted[:, 1]))
+        if len(self.deleted):
+            out.update(int(x) for x in np.unique(self.deleted[:, 1]))
+        return out
+
+    def inserted_labels(self) -> set[int]:
+        """Label ids with at least one *inserted* edge (these destabilize
+        dependent SOI rows; deletions alone never do)."""
+        if not len(self.inserted):
+            return set()
+        return {int(x) for x in np.unique(self.inserted[:, 1])}
+
+    def compose(self, later: "GraphDelta") -> "GraphDelta":
+        """The delta of applying ``self`` then ``later`` (cancelling an
+        insert against a later delete of the same triple and vice versa)."""
+        ins = {tuple(r) for r in self.inserted.tolist()}
+        dele = {tuple(r) for r in self.deleted.tolist()}
+        for r in later.inserted.tolist():
+            t = tuple(r)
+            if t in dele:
+                dele.discard(t)
+            else:
+                ins.add(t)
+        for r in later.deleted.tolist():
+            t = tuple(r)
+            if t in ins:
+                ins.discard(t)
+            else:
+                dele.add(t)
+        as_rows = lambda s: (
+            np.asarray(sorted(s), dtype=np.int32).reshape(-1, 3)
+        )
+        return GraphDelta(
+            inserted=as_rows(ins),
+            deleted=as_rows(dele),
+            nodes_before=self.nodes_before,
+            nodes_after=later.nodes_after,
+            labels_before=self.labels_before,
+            labels_after=later.labels_after,
+        )

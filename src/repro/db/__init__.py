@@ -23,7 +23,10 @@ package is the database-shaped surface over the PR-1 engine internals::
 Layers (one module each):
 
 * :class:`GraphDB` — mutable handle, snapshot semantics, monotone version
-  counter folded into the plan-cache fingerprint (precise invalidation).
+  counter folded into the plan-cache fingerprint (precise invalidation),
+  bounded per-version delta log driving incremental plan maintenance:
+  shape-stable mutations patch superseded plans in place and warm-resume
+  their fixpoints instead of rebuilding (DESIGN.md Sect. 8).
 * :class:`Session` / :class:`ResultFuture` — deadline/size admission over
   the engine's microbatcher.
 * :class:`Q` — fluent builder for the Sect.-4 algebra; round-trips through

@@ -28,11 +28,12 @@ all sessions hit one warm plan cache.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import Iterable, Sequence
 
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, GraphDelta
 from repro.core.sparql import Query
 from repro.engine.batcher import DEFAULT_BUCKETS
 from repro.engine.engine import Engine, EngineMetrics, graph_fingerprint
@@ -40,6 +41,11 @@ from repro.engine.engine import Engine, EngineMetrics, graph_fingerprint
 from .results import ResultSet
 
 StrTriple = tuple[str, str, str]
+
+# Per-version deltas kept for incremental plan maintenance; once a stale
+# plan falls further behind than this, `delta_since` reports the history as
+# truncated and the engine rebuilds cold (DESIGN.md Sect. 8.1).
+DELTA_LOG_LIMIT = 64
 
 
 def _empty_graph() -> Graph:
@@ -53,7 +59,27 @@ def _empty_graph() -> Graph:
 
 
 class GraphDB:
-    """A mutable database handle over immutable :class:`Graph` snapshots."""
+    """A mutable database handle over immutable :class:`Graph` snapshots.
+
+    Contracts the rest of the system builds on:
+
+    * **Snapshot pinning** — :meth:`query` / :meth:`execute_many` / session
+      flushes each pin exactly one snapshot for their whole call; a
+      concurrent mutation never makes one batch mix two graph versions.
+      Returned :class:`~repro.db.results.ResultSet` objects keep reading
+      through the snapshot they were computed against.
+    * **Set semantics** — duplicate inserts and missing deletes are no-ops
+      that bump nothing and invalidate nothing.
+    * **Versioned invalidation** — every effective mutation bumps
+      :attr:`version` (folded into :attr:`fingerprint`), records a
+      :class:`~repro.core.graph.GraphDelta` in a bounded delta log, and
+      lets :meth:`repro.engine.engine.Engine.refresh` classify superseded
+      plans as *resumable* (shape-stable delta: operands patched in place,
+      previous fixpoint warm-starts the next solve) or *cold* (dictionary
+      grew: full rebuild).  ``incremental=False`` disables resumption.
+    * **Stable ids** — existing node/label ids never change; deletes keep
+      names in the dictionary, inserts append.
+    """
 
     def __init__(
         self,
@@ -65,6 +91,7 @@ class GraphDB:
         backend: str | None = None,
         mesh=None,
         n_blocks: int | None = None,
+        incremental: bool = True,
     ):
         """``engine`` picks the fixpoint engine ("auto" = cost-based):
         dense / packed / sparse / jacobi_packed / partitioned.  ``mesh`` is
@@ -72,7 +99,9 @@ class GraphDB:
         the partitioned engine shards chi's node axis over; with a mesh of
         >= 2 devices, engine="auto" selects "partitioned" once the graph
         outgrows single-shard budgets.  ``n_blocks`` overrides the number of
-        destination blocks (default: one per mesh device)."""
+        destination blocks (default: one per mesh device).  ``incremental``
+        enables warm-resume plan maintenance across mutations (DESIGN.md
+        Sect. 8); disable it to force every superseded plan cold."""
         if graph is None:
             graph = _empty_graph()
         if graph.node_names is None or graph.label_names is None:
@@ -86,6 +115,10 @@ class GraphDB:
         self._node_index = {n: i for i, n in enumerate(graph.node_names)}
         self._label_index = {n: i for i, n in enumerate(graph.label_names)}
         self._edge_set: set[tuple[int, int, int]] | None = None  # lazy
+        # (version, delta that produced it) — consumed by Engine.refresh()
+        self._delta_log: deque[tuple[int, GraphDelta]] = deque(
+            maxlen=DELTA_LOG_LIMIT
+        )
         self._lock = threading.RLock()
         self._engine = Engine(
             self,
@@ -95,10 +128,12 @@ class GraphDB:
             backend=backend,
             mesh=mesh,
             n_blocks=n_blocks,
+            incremental=incremental,
         )
 
     @classmethod
     def from_triples(cls, triples: Iterable[StrTriple], **kwargs) -> "GraphDB":
+        """Build a database from (subject, predicate, object) string triples."""
         return cls(Graph.from_triples(triples), **kwargs)
 
     # ------------------------------------------------------------------ #
@@ -117,10 +152,12 @@ class GraphDB:
 
     @property
     def node_index(self) -> dict[str, int]:
+        """Live node name -> id map (ids are stable across mutations)."""
         return self._node_index
 
     @property
     def label_index(self) -> dict[str, int]:
+        """Live label name -> id map (ids are stable across mutations)."""
         return self._label_index
 
     # ------------------------------------------------------------------ #
@@ -128,10 +165,12 @@ class GraphDB:
     # ------------------------------------------------------------------ #
     @property
     def n_nodes(self) -> int:
+        """Node count of the current snapshot."""
         return self._graph.n_nodes
 
     @property
     def n_triples(self) -> int:
+        """Triple count of the current snapshot."""
         return self._graph.n_edges
 
     def snapshot(self) -> Graph:
@@ -219,16 +258,23 @@ class GraphDB:
                 # a duplicate triple cannot introduce new names, so the
                 # dictionary is untouched too: nothing to commit
                 return 0
+            rows = np.asarray(added, dtype=np.int32).reshape(-1, 3)
             self._commit(
                 Graph(
                     n_nodes=len(node_names),
                     n_labels=len(label_names),
-                    triples=np.vstack(
-                        [self._graph.triples, np.asarray(added, dtype=np.int32)]
-                    ),
+                    triples=np.vstack([self._graph.triples, rows]),
                     node_names=node_names,
                     label_names=label_names,
-                )
+                ),
+                GraphDelta(
+                    inserted=rows,
+                    deleted=np.zeros((0, 3), np.int32),
+                    nodes_before=self._graph.n_nodes,
+                    nodes_after=len(node_names),
+                    labels_before=self._graph.n_labels,
+                    labels_after=len(label_names),
+                ),
             )
             return len(added)
 
@@ -258,20 +304,47 @@ class GraphDB:
                 dtype=bool,
             )
             self._edge_set = edges - doomed
+            n, la = self._graph.n_nodes, self._graph.n_labels
             self._commit(
                 Graph(
-                    n_nodes=self._graph.n_nodes,
-                    n_labels=self._graph.n_labels,
+                    n_nodes=n,
+                    n_labels=la,
                     triples=self._graph.triples[keep],
                     node_names=self._graph.node_names,
                     label_names=self._graph.label_names,
-                )
+                ),
+                GraphDelta(
+                    inserted=np.zeros((0, 3), np.int32),
+                    deleted=np.asarray(sorted(doomed), np.int32).reshape(-1, 3),
+                    nodes_before=n,
+                    nodes_after=n,
+                    labels_before=la,
+                    labels_after=la,
+                ),
             )
             return len(doomed)
 
-    def _commit(self, graph: Graph) -> None:
+    def _commit(self, graph: Graph, delta: GraphDelta) -> None:
         self._graph = graph
         self.version += 1
+        self._delta_log.append((self.version, delta))
+
+    def delta_since(self, version: int) -> GraphDelta | None:
+        """The composed :class:`GraphDelta` from ``version`` to now.
+
+        Returns ``None`` when the bounded delta log no longer reaches back
+        to ``version`` (or the version is unknown) — the caller must then
+        treat anything pinned to that version as cold.  Inserts cancelled
+        by later deletes (and vice versa) drop out of the composition.
+        """
+        with self._lock:
+            entries = [d for v, d in self._delta_log if v > version]
+            if len(entries) != self.version - version or not entries:
+                return None  # log truncated before `version` (or no change)
+            out = entries[0]
+            for d in entries[1:]:
+                out = out.compose(d)
+            return out
 
     # ------------------------------------------------------------------ #
     # querying
@@ -315,4 +388,6 @@ class GraphDB:
         return build() if callable(build) else query
 
     def metrics(self) -> EngineMetrics:
+        """Serving counters: cache hits/misses, invalidation classes
+        (cold vs resumable vs resumed), microbatches, per-stage seconds."""
         return self._engine.metrics()

@@ -45,30 +45,38 @@ class ResultSet:
 
     @property
     def stats(self) -> PruneStats:
+        """Pruning statistics (triple counts before/after, per-edge splits)."""
         return self._raw.stats
 
     @property
     def sweeps(self) -> int:
+        """Fixpoint sweeps the solve took (warm resumes take far fewer)."""
         return self._raw.sweeps
 
     @property
     def engine(self) -> str:
+        """Fixpoint engine(s) that served this request."""
         return self._raw.engine
 
     @property
     def cache_hit(self) -> bool:
+        """True iff every plan this request needed was already cached."""
         return self._raw.cache_hit
 
     @property
     def batch(self) -> int:
+        """Microbatch bucket the request rode in."""
         return self._raw.batch
 
     @property
     def template_keys(self) -> tuple[str, ...]:
+        """Plan-cache template keys (one per union-free part)."""
         return self._raw.template_keys
 
     @property
     def timings(self) -> dict[str, float]:
+        """Per-stage seconds; ``total`` is this request's fair share of
+        ``batch_total`` (the whole microbatch wall time)."""
         return self._raw.timings
 
     @property
@@ -85,6 +93,7 @@ class ResultSet:
     # ------------------------------------------------------------------ #
     @property
     def variables(self) -> tuple[str, ...]:
+        """The query's variable names, sorted."""
         return tuple(sorted(self._raw.bindings))
 
     def binding_mask(self, var: str) -> np.ndarray:
@@ -100,6 +109,7 @@ class ResultSet:
         return self._name_cache[var]
 
     def binding_count(self, var: str) -> int:
+        """Candidate count for ``var`` without materializing names."""
         return int(self._raw.bindings[var].sum())
 
     # ------------------------------------------------------------------ #

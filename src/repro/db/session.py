@@ -43,6 +43,7 @@ class ResultFuture:
         self._result: ResultSet | None = None
 
     def done(self) -> bool:
+        """True once the request's batch has flushed and resolved it."""
         return self._result is not None
 
     def result(self) -> ResultSet:
@@ -98,6 +99,7 @@ class Session:
     # ------------------------------------------------------------------ #
     @property
     def pending(self) -> int:
+        """Requests submitted but not yet released to the engine."""
         return len(self._pending)
 
     def submit(self, query) -> ResultFuture:

@@ -25,7 +25,13 @@ import warnings
 
 from .batcher import BatchLayout, MicroBatcher, batch_layout, batched_soi, bucket_for
 from .cache import CacheStats, PlanCache
-from .cost import CostEstimate, choose_engine, estimate_costs
+from .cost import (
+    CostEstimate,
+    ResumeDecision,
+    choose_engine,
+    estimate_costs,
+    resume_decision,
+)
 from .engine import Engine, EngineMetrics
 from .plan import CompiledPlan, PlanMetrics
 from .template import (
@@ -37,8 +43,9 @@ from .template import (
 )
 
 def __getattr__(name: str):
-    # deprecation shim: repro.db.ResultSet is the public result type now;
-    # the raw ExecResult record remains reachable for old callers but warns.
+    """Deprecation shim: `repro.db.ResultSet` is the public result type now;
+    the raw ``ExecResult`` record remains reachable for old callers but
+    warns."""
     if name == "ExecResult":
         warnings.warn(
             "importing ExecResult from repro.engine is deprecated; use the "
@@ -64,6 +71,7 @@ __all__ = [
     "PlanCache",
     "PlanMetrics",
     "QueryTemplate",
+    "ResumeDecision",
     "SLOT_PREFIX",
     "TemplateInstance",
     "batch_layout",
@@ -72,5 +80,6 @@ __all__ = [
     "canonicalize",
     "choose_engine",
     "estimate_costs",
+    "resume_decision",
     "template_key",
 ]

@@ -49,6 +49,7 @@ class BatchLayout:
 
 
 def batch_layout(parts: Iterable[SOI]) -> BatchLayout:
+    """Disjoint-union SOI plus per-instance offsets for result demux."""
     parts = list(parts)
     base: list[str] = []
     is_const: list[str | None] = []
@@ -100,6 +101,7 @@ class MicroBatcher:
         self._queues: dict[str, list[tuple[int, TemplateInstance]]] = {}
 
     def add(self, index: int, instance: TemplateInstance) -> None:
+        """Queue one request under its template key for the next drain."""
         self._queues.setdefault(instance.template.key, []).append(
             (index, instance)
         )

@@ -17,6 +17,8 @@ V = TypeVar("V")
 
 @dataclasses.dataclass
 class CacheStats:
+    """Point-in-time cache counters (the zero-recompile observables)."""
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -26,6 +28,7 @@ class CacheStats:
 
     @property
     def hit_rate(self) -> float:
+        """Hits over total lookups (0.0 before any lookup)."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
@@ -88,6 +91,19 @@ class PlanCache:
             self.evictions += 1
         return value
 
+    def pop_matching(
+        self, match: Callable[[Hashable], bool]
+    ) -> list[tuple[Hashable, V]]:
+        """Remove and return the entries whose key satisfies ``match``.
+
+        Unlike :meth:`invalidate` this does NOT count toward
+        ``invalidations``: it is the *reclassification* path — the engine
+        moves superseded-but-resumable plans into its staging area instead
+        of dropping them (DESIGN.md Sect. 8.3).
+        """
+        keys = [k for k in self._entries if match(k)]
+        return [(k, self._entries.pop(k)) for k in keys]
+
     def invalidate(self, stale: Callable[[Hashable], bool]) -> int:
         """Drop exactly the entries whose key satisfies ``stale``.
 
@@ -104,9 +120,11 @@ class PlanCache:
         return len(keys)
 
     def clear(self) -> None:
+        """Drop every entry (counters keep accumulating)."""
         self._entries.clear()
 
     def stats(self) -> CacheStats:
+        """A :class:`CacheStats` snapshot of the counters."""
         return CacheStats(
             hits=self.hits,
             misses=self.misses,

@@ -124,6 +124,72 @@ def estimate_costs(
     return costs
 
 
+# resume-vs-cold model constants (DESIGN.md Sect. 8.3).  A cold rebuild
+# pays SOI build + compile + operand upload + a fresh jit trace — the trace
+# dominates by orders of magnitude on the serving path (the PR-1 cold/warm
+# bench), which is why TRACE_COST towers over the per-sweep terms.
+TRACE_COST = 5e7  # fresh jit trace + lowering of a plan's fixpoint
+PATCH_COST_PER_EDGE = 16.0  # host-side rebuild of touched operators
+RESUME_SWEEP_RATE = 50.0  # extra-sweep inflation per fractional delta
+DEFAULT_SWEEPS = 8.0  # sweep prior when the plan never executed
+RESUME_MAX_DELTA_FRACTION = 0.25  # past this, the old chi is mostly reseeded
+
+
+@dataclasses.dataclass(frozen=True)
+class ResumeDecision:
+    """Outcome of the resume-vs-cold classification for one stale plan."""
+
+    resume: bool
+    est_resume: float  # model cost of patch + warm-started sweeps
+    est_cold: float  # model cost of rebuild + cold sweeps
+    reason: str
+
+
+def resume_decision(
+    g: Graph,
+    c: CompiledSOI,
+    *,
+    engine: str,
+    delta_edges: int,
+    last_sweeps: int | None = None,
+    backend: str | None = None,
+    n_devices: int = 1,
+) -> ResumeDecision:
+    """Should a superseded (shape-stable) plan warm-resume or rebuild cold?
+
+    Expected sweeps scale with the delta size: a warm start from the old
+    fixpoint re-runs roughly ``1 + S_cold * min(1, rate * delta/E)`` sweeps
+    (deletions propagate locally; insertions re-seed the destabilized
+    closure), whereas a cold rebuild pays the full sweep count *plus* the
+    trace.  Past :data:`RESUME_MAX_DELTA_FRACTION` of the edges changing,
+    the old chi is mostly re-seeded anyway and the patch bookkeeping stops
+    paying for itself — rebuild cold.  Either choice is correct (the
+    resumed fixpoint is asserted identical); this is purely a latency call.
+    """
+    costs = estimate_costs(g, c, backend=backend, n_devices=n_devices)
+    per_sweep = costs[engine]
+    if per_sweep == float("inf"):
+        # the plan exists and runs with this engine, whatever the model's
+        # feasibility gate says (e.g. partitioned pinned on one device);
+        # price its sweeps with the always-finite sparse estimate instead
+        per_sweep = costs["sparse"]
+    _, _, e = _soi_stats(g, c)
+    frac = delta_edges / max(e, 1)
+    s_cold = float(last_sweeps) if last_sweeps else DEFAULT_SWEEPS
+    s_resume = 1.0 + s_cold * min(1.0, RESUME_SWEEP_RATE * frac)
+    est_cold = TRACE_COST + s_cold * per_sweep
+    est_resume = PATCH_COST_PER_EDGE * delta_edges + s_resume * per_sweep
+    resume = frac <= RESUME_MAX_DELTA_FRACTION and est_resume < est_cold
+    reason = (
+        f"{'resume' if resume else 'cold'}: delta {delta_edges}/{e} edges "
+        f"({frac:.2%}), est resume {est_resume:.3g} vs cold {est_cold:.3g} "
+        f"({engine}, ~{s_cold:.0f} sweeps cold / {s_resume:.1f} resumed)"
+    )
+    return ResumeDecision(
+        resume=resume, est_resume=est_resume, est_cold=est_cold, reason=reason
+    )
+
+
 def choose_engine(
     g: Graph,
     c: CompiledSOI,

@@ -26,6 +26,7 @@ from repro.core import pruning, soi as soi_mod, sparql
 from repro.core.graph import Graph
 from repro.core.sparql import Query
 
+from . import cost as cost_mod
 from .batcher import DEFAULT_BUCKETS, MicroBatcher, bucket_for
 from .cache import BoundedDict, CacheStats, PlanCache
 from .plan import CompiledPlan
@@ -49,6 +50,22 @@ class ExecResult:
 
 @dataclasses.dataclass
 class EngineMetrics:
+    """Cumulative serving counters, split by the invalidation taxonomy.
+
+    On a mutation, a superseded plan is either *cold-invalidated*
+    (``cache.invalidations``: dictionary/shape change, or no delta log —
+    full rebuild on next use) or *reclassified resumable*
+    (``plans_resumable``: staged with its delta; on next use it is patched
+    in place and warm-started — ``plans_resumed``).  ``resumes_declined``
+    counts staged plans that went cold after all: the cost model judged
+    the delta too large, a later dictionary-changing mutation discarded
+    the staging area, or the bounded staging evicted them — so
+    ``plans_resumable == plans_resumed + resumes_declined + |staged|``.  ``warm_resume_solves`` counts solves
+    that actually started from a previous fixpoint, and
+    ``adj_rebuilds_saved`` counts adjacency uploads avoided because the
+    delta touched none of an entry's labels (DESIGN.md Sect. 8).
+    """
+
     requests: int
     microbatches: int  # == fixpoint solves: one disjoint-union solve each
     engine_counts: dict[str, int]
@@ -56,14 +73,20 @@ class EngineMetrics:
     stage_seconds: dict[str, float]
     invalidation_events: int = 0  # refreshes that adopted a mutated snapshot
     adj_invalidations: int = 0  # adjacency entries dropped on those refreshes
+    plans_resumable: int = 0  # stale plans reclassified resumable (staged)
+    plans_resumed: int = 0  # staged plans actually patched + reused
+    resumes_declined: int = 0  # staged plans the cost model sent cold
+    warm_resume_solves: int = 0  # fixpoint solves warm-started from old chi
+    adj_rebuilds_saved: int = 0  # adjacency kept because its labels were untouched
 
     @property
     def plan_builds(self) -> int:
-        # every cache miss builds exactly one plan; single source of truth
-        return self.cache.misses
+        """Plans built from scratch (cache misses minus in-place resumes)."""
+        return self.cache.misses - self.plans_resumed
 
     @property
     def plan_invalidations(self) -> int:
+        """Cold invalidations: superseded plans dropped outright."""
         return self.cache.invalidations
 
 
@@ -103,7 +126,14 @@ class Engine:
         backend: str | None = None,
         mesh=None,
         n_blocks: int | None = None,
+        incremental: bool = True,
     ):
+        """Build the facade over ``db`` (a Graph or a mutable GraphDB source).
+
+        ``incremental`` enables warm-resume maintenance of superseded plans
+        across shape-stable mutations (DESIGN.md Sect. 8); with it off,
+        every mutation invalidates cold, as before.
+        """
         # ``db`` is either an immutable core Graph or a mutable source with
         # (graph, version, fingerprint, node_index) — i.e. repro.db.GraphDB.
         # Duck-typed so this module never imports the layer above it.
@@ -148,10 +178,19 @@ class Engine:
                 self.db.node_index() if self.db.node_names is not None else {}
             )
         self._prev_db: Graph = self.db  # adjacency retention window
+        self.incremental = incremental
+        # superseded-but-resumable plans: (template key, bucket, engine,
+        # n_blocks, mesh) -> (plan, composed delta from its snapshot to now)
+        self._resumable: dict = {}
         self._requests = 0
         self._microbatches = 0
         self._invalidation_events = 0
         self._adj_invalidations = 0
+        self._plans_resumable = 0
+        self._plans_resumed = 0
+        self._resumes_declined = 0
+        self._warm_solves = 0
+        self._adj_rebuilds_saved = 0
         self._engine_counts: dict[str, int] = {}
         self._stage_seconds: dict[str, float] = {}
 
@@ -163,28 +202,86 @@ class Engine:
 
         Called on every execute/plan access; a no-op unless the source's
         monotone version counter moved.  Invalidation is *precise*, not a
-        flush: plans keyed by the engine's current or immediately-previous
-        fingerprint survive (history <= 1 version, so results in flight keep
-        their plans), anything older is dropped and counted in
-        ``cache.invalidations``.  Adjacency entries built from graphs outside
-        that window are dropped too — they can never hit again because the
-        adjacency cache matches on graph identity.
+        flush, and since ISSUE 4 it is also *classified* (DESIGN.md 8.3):
 
-        Returns the number of plans invalidated by this call.
+        * **resumable** — the source's delta log covers the gap and the
+          delta is shape-stable (no new nodes/labels).  Plans keyed at the
+          superseded fingerprint are moved into a staging area together
+          with the delta; on next use they are patched in place and their
+          last fixpoint warm-starts the solve.  Plans staged by an earlier
+          refresh compose their delta forward.  Adjacency entries whose
+          operator labels the delta does not touch are bit-identical in the
+          new snapshot, so they are re-keyed instead of rebuilt (counted in
+          ``adj_rebuilds_saved``).
+        * **cold** — dictionary/shape change, or no usable delta.  Plans
+          keyed outside the {current, previous} fingerprint window are
+          dropped and counted in ``cache.invalidations`` (the previous
+          window survives so results in flight keep their plans); staged
+          resumables are discarded; adjacency from graphs outside the
+          window is dropped (it can never hit again — the adjacency cache
+          matches on graph identity).
+
+        Returns the number of plans cold-invalidated by this call.
         """
         if self._source is None or self._source.version == self._version:
             return 0
-        prev_fp, prev_db = self.fingerprint, self.db
+        prev_fp, prev_db, prev_version = self.fingerprint, self.db, self._version
+        version = self._source.version
         self.db = self._source.graph
         self.fingerprint = self._source.fingerprint
-        self._version = self._source.version
         self._node_index = self._source.node_index
+        delta = None
+        if self.incremental:
+            delta_since = getattr(self._source, "delta_since", None)
+            if delta_since is not None:
+                delta = delta_since(prev_version)
+        if self._source.version != version:
+            # the source mutated between reading the snapshot and the delta
+            # (an unlocked direct Engine): the pair may be torn, so fall
+            # back to cold — patching with a mismatched delta could mix two
+            # graph versions inside one plan's operands.  self._version
+            # stays at the first read, so the next refresh re-adopts.
+            delta = None
+        self._version = version
+        resumable = delta is not None and delta.shape_stable
+
+        if resumable:
+            # earlier-staged plans ride forward under the composed delta
+            self._resumable = {
+                k: (plan, d.compose(delta))
+                for k, (plan, d) in self._resumable.items()
+            }
+            moved = self.cache.pop_matching(lambda key: key[1] == prev_fp)
+            for key, plan in moved:
+                self._resumable[(key[0], *key[2:])] = (plan, delta)
+            self._plans_resumable += len(moved)
+            # bounded staging: never pin more superseded plans (device
+            # operands + chi memos) than the live cache could hold — the
+            # oldest staged entries go cold, counted as declined resumes
+            while len(self._resumable) > self.cache.capacity:
+                self._resumable.pop(next(iter(self._resumable)))
+                self._resumes_declined += 1
+        else:
+            # staged plans cannot survive a dictionary/shape change (or a
+            # truncated delta log): they go cold, counted as declined
+            self._resumes_declined += len(self._resumable)
+            self._resumable.clear()
+
         keep_fp = {self.fingerprint, prev_fp}
         dropped = self.cache.invalidate(lambda key: key[1] not in keep_fp)
-        for k, (g_stored, _) in list(self._adj_cache.items()):
-            if g_stored is not self.db and g_stored is not prev_db:
-                del self._adj_cache[k]
-                self._adj_invalidations += 1
+        touched = delta.touched_labels() if resumable else None
+        for k, (g_stored, adj) in list(self._adj_cache.items()):
+            if g_stored is self.db:
+                continue
+            if g_stored is prev_db:
+                if resumable and not ({la for la, _ in k[1]} & touched):
+                    # untouched labels: the arrays are bit-identical in the
+                    # new snapshot — re-key instead of rebuilding later
+                    self._adj_cache[k] = (self.db, adj)
+                    self._adj_rebuilds_saved += 1
+                continue  # retention window: in-flight plans share these
+            del self._adj_cache[k]
+            self._adj_invalidations += 1
         self._prev_db = prev_db
         self._invalidation_events += 1
         return dropped
@@ -214,20 +311,56 @@ class Engine:
         )
         hit = key in self.cache
         plan = self.cache.get_or_build(
-            key,
-            lambda: CompiledPlan(
-                template,
-                self.db,
-                engine=self.engine_pref,
-                batch=bucket,
-                node_index=self._node_index,
-                backend=self.backend,
-                adj_cache=self._adj_cache,
-                mesh=self.mesh,
-                n_blocks=self.n_blocks,
-            ),
+            key, lambda: self._build_or_resume(template, bucket, key)
         )
         return plan, hit
+
+    def _build_or_resume(self, template, bucket: int, key) -> CompiledPlan:
+        """Miss path: patch a staged resumable plan, or build from scratch.
+
+        A staged plan resumes when the cost model expects the patch + warm
+        sweeps to undercut a rebuild (:func:`repro.engine.cost.
+        resume_decision`); either way the outcome is re-keyed under the
+        current fingerprint by the caller's ``get_or_build``.
+        """
+        staged = self._resumable.pop((key[0], *key[2:]), None)
+        if staged is not None:
+            plan, delta = staged
+            decision = cost_mod.resume_decision(
+                self.db,
+                plan.csoi,
+                engine=plan.engine,
+                delta_edges=delta.n_changes,
+                last_sweeps=plan.last_sweeps,
+                backend=self.backend,
+                n_devices=self.n_devices,
+            )
+            if decision.resume:
+                try:
+                    plan.patch_graph(
+                        self.db, delta, self._node_index, self._adj_cache
+                    )
+                except ValueError:
+                    self._resumes_declined += 1  # not actually patchable
+                else:
+                    self._plans_resumed += 1
+                    return plan
+            else:
+                self._resumes_declined += 1
+        return CompiledPlan(
+            template,
+            self.db,
+            engine=self.engine_pref,
+            batch=bucket,
+            node_index=self._node_index,
+            backend=self.backend,
+            adj_cache=self._adj_cache,
+            mesh=self.mesh,
+            n_blocks=self.n_blocks,
+            # chi memoization only pays off when the graph can mutate: a
+            # plan over a plain immutable Graph never stages warm starts
+            incremental=self.incremental and self._source is not None,
+        )
 
     # ------------------------------------------------------------------ #
     # execution
@@ -342,8 +475,10 @@ class Engine:
         t_plan = time.perf_counter() - t
 
         t = time.perf_counter()
+        warm_before = plan.metrics.warm_resumes
         chi, sweeps = plan.execute(bindings)
         t_solve = time.perf_counter() - t
+        self._warm_solves += plan.metrics.warm_resumes - warm_before
 
         self._microbatches += 1
         self._engine_counts[plan.engine] = (
@@ -388,6 +523,7 @@ class Engine:
 
     # ------------------------------------------------------------------ #
     def metrics(self) -> EngineMetrics:
+        """A point-in-time snapshot of the serving counters."""
         return EngineMetrics(
             requests=self._requests,
             microbatches=self._microbatches,
@@ -396,6 +532,11 @@ class Engine:
             stage_seconds=dict(self._stage_seconds),
             invalidation_events=self._invalidation_events,
             adj_invalidations=self._adj_invalidations,
+            plans_resumable=self._plans_resumable,
+            plans_resumed=self._plans_resumed,
+            resumes_declined=self._resumes_declined,
+            warm_resume_solves=self._warm_solves,
+            adj_rebuilds_saved=self._adj_rebuilds_saved,
         )
 
 

@@ -30,10 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dualsim, soi as soi_mod
-from repro.core.graph import Graph
+from repro.core.graph import Graph, GraphDelta
 
 from . import cost as cost_mod
 from .batcher import BatchLayout, batch_layout
+from .cache import BoundedDict
 from .template import QueryTemplate, slot_index
 
 
@@ -64,6 +65,8 @@ class PlanMetrics:
     traces: int = 0  # times the jitted fixpoint was (re)traced
     executions: int = 0  # times it was called
     build_seconds: float = 0.0  # host-side SOI build + compile + operands
+    patches: int = 0  # shape-stable graph deltas adopted in place
+    warm_resumes: int = 0  # executions warm-started from a previous chi
 
 
 class CompiledPlan:
@@ -81,14 +84,18 @@ class CompiledPlan:
         adj_cache: dict | None = None,
         mesh: jax.sharding.Mesh | None = None,
         n_blocks: int | None = None,
+        incremental: bool = True,
     ):
+        """Compile ``template`` against ``db`` at batch size ``batch``."""
         t0 = time.perf_counter()
         backend = backend or jax.default_backend()
         self.template = template
         self.batch = batch
         self.n_nodes = db.n_nodes
         self.mesh = mesh
+        self.incremental = incremental
         n_devices = int(mesh.devices.size) if mesh is not None else 1
+        self._n_devices = n_devices
         self.n_blocks = n_blocks if n_blocks is not None else max(n_devices, 1)
         # chi is [V, n]: shard the node axis across every mesh axis; the
         # V axis (variables) stays replicated — it is tiny and irregular
@@ -116,6 +123,7 @@ class CompiledPlan:
                 for c in union.is_const
             ],
         )
+        self._stripped = stripped  # kept for shape-stable recompiles (patch)
         self.csoi = soi_mod.compile_soi(stripped, db, node_index=node_index)
 
         # (instance, slot variable) scatter order; row j of const_rows lands
@@ -180,12 +188,23 @@ class CompiledPlan:
         else:
             raise ValueError(f"unknown engine {engine!r}")
 
+        self._adj_cache = adj_cache
+        # incremental maintenance state (DESIGN.md Sect. 8): the last solved
+        # chi per constant tuple, and re-seeded warm starts staged by
+        # patch_graph for the next execution of the same constants
+        self._chi_memo: BoundedDict = BoundedDict(capacity=4)
+        self._warm: dict = {}
+        self.last_sweeps: int | None = None
+
         self.metrics = PlanMetrics()
         scatter = jnp.asarray(self._scatter_ids)
         n_nodes = self.n_nodes
 
-        def _run(ops: dualsim.Operands, const_rows: jax.Array):
-            # executes at trace time only: the counter observes retraces
+        def _run(ops: dualsim.Operands, const_rows: jax.Array, chi0: jax.Array):
+            # executes at trace time only: the counter observes retraces.
+            # chi0 is the warm-start upper bound; the cold path passes
+            # ops.init itself, making the AND below an identity — one trace
+            # serves both regimes.
             self.metrics.traces += 1
             init = ops.init
             if const_rows.shape[0]:
@@ -196,6 +215,7 @@ class CompiledPlan:
                         ((0, 0), (0, init.shape[-1] - const_rows.shape[-1])),
                     )
                 init = init.at[scatter].set(init[scatter] & const_rows)
+            init = jnp.logical_and(init, chi0)
             chi, sweeps = solver(dataclasses.replace(ops, init=init))
             return chi[:, :n_nodes], sweeps
 
@@ -205,6 +225,7 @@ class CompiledPlan:
     # ------------------------------------------------------------------ #
     @property
     def n_slot_rows(self) -> int:
+        """Init rows the per-request constants scatter into."""
         return len(self._scatter_ids)
 
     def const_rows(self, bindings: Sequence[tuple[str, ...]]) -> np.ndarray:
@@ -243,9 +264,83 @@ class CompiledPlan:
 
         Returns ``(chi, sweeps)`` with ``chi`` of shape
         ``[batch * n_vars, n_nodes]``; use ``self.layout.chi_slice(i)`` to
-        demux instance i.
+        demux instance i.  When :meth:`patch_graph` staged a re-seeded warm
+        start for exactly these constants, the solve resumes from it
+        instead of the Eq.-13 init (same fixpoint, far fewer sweeps).
         """
         rows = jnp.asarray(self.const_rows(bindings))
-        chi, sweeps = self._run(self.operands, rows)
+        key = tuple(bindings)
+        warm = self._warm.pop(key, None)
+        if warm is None:
+            chi0 = self.operands.init  # cold: AND with init is an identity
+        else:
+            width = self.operands.init.shape[-1]
+            if warm.shape[-1] != width:  # partitioned block padding
+                warm = np.pad(warm, ((0, 0), (0, width - warm.shape[-1])))
+            chi0 = jnp.asarray(warm)
+            self.metrics.warm_resumes += 1
+        chi, sweeps = self._run(self.operands, rows, chi0)
         self.metrics.executions += 1
-        return np.asarray(chi), int(sweeps)
+        chi, sweeps = np.asarray(chi), int(sweeps)
+        self.last_sweeps = sweeps
+        if self.incremental:
+            # bit-packed: 8x smaller than the bool chi it warm-starts
+            self._chi_memo[key] = np.packbits(chi, axis=-1)
+        return chi, sweeps
+
+    def patch_graph(
+        self,
+        db: Graph,
+        delta: GraphDelta,
+        node_index: dict[str, int] | None = None,
+        adj_cache: dict | None = None,
+    ) -> None:
+        """Adopt a shape-stable mutated snapshot without a rebuild.
+
+        The template SOI, batch layout, and jitted fixpoint all survive;
+        only the graph-dependent pieces move: the compiled SOI's Eq.-13
+        init is recomputed, touched adjacency operators are patched in
+        place (:func:`repro.core.dualsim.patch_operands` — untouched
+        operators and therefore operand *shapes* carry over, so the
+        existing trace keeps serving), and every memoized fixpoint becomes
+        a staged warm start with the delta's destabilized rows re-seeded
+        to ⊤ (DESIGN.md Sect. 8.2).
+        """
+        if not delta.shape_stable or db.n_nodes != self.n_nodes:
+            raise ValueError("patch_graph needs a shape-stable delta")
+        if node_index is not None:
+            self._node_index = node_index
+        old_mats = self.csoi.mats
+        self.csoi = soi_mod.compile_soi(
+            self._stripped, db, node_index=self._node_index
+        )
+        if self.csoi.mats != old_mats:  # dictionary change slipped through
+            raise ValueError("operator list moved; delta is not resumable")
+        cache = adj_cache if adj_cache is not None else self._adj_cache
+        self.operands = dualsim.patch_operands(
+            self.operands,
+            self.csoi,
+            db,
+            delta.touched_labels(),
+            n_blocks=self.n_blocks,
+            adj_cache=cache,
+        )
+        if (
+            self.engine == "partitioned"
+            and self.mesh is not None
+            and self.n_blocks % self._n_devices == 0
+        ):
+            self.operands = _shard_partitioned_operands(
+                self.operands, self.mesh, self.chi_spec
+            )
+        grow = dualsim.destabilized_rows(self.csoi, delta.inserted_labels())
+        self._warm = {}
+        for key, packed in self._chi_memo.items():
+            chi0 = np.unpackbits(
+                packed, axis=-1, count=self.n_nodes
+            ).astype(bool)
+            chi0[grow] = True
+            self._warm[key] = chi0
+        # superseded fixpoints are warm seeds now, not current results
+        self._chi_memo.clear()
+        self.metrics.patches += 1

@@ -6,9 +6,11 @@ deadline/size admission policy releases them to the engine as microbatches
 (DESIGN.md Sect. 6.2).  The query shape is compiled ONCE into a cached
 plan per microbatch bucket; every subsequent request rebinds constants as
 jitted-fixpoint *inputs* (zero recompiles, zero retraces).  With
-``--mutate``, the driver also inserts fresh triples mid-stream to show
-versioned plan invalidation: stale plans rebuild lazily and the metrics
-line reports exactly how many were invalidated.
+``--mutate``, the driver also mutates mid-stream to show both invalidation
+classes (DESIGN.md Sect. 8): a shape-stable delete/re-insert churn whose
+superseded plans are patched in place and warm-resumed from their previous
+fixpoint, then a dictionary-growing insert whose plans rebuild cold; the
+metrics lines split the counts accordingly.
 
 With ``--engine partitioned --devices 8`` the fixpoint shards over 8
 simulated host devices (one destination block per device; cross-shard
@@ -45,7 +47,9 @@ def main() -> None:
                     help="shard over a mesh of this many (simulated host) "
                          "devices; 0 = no mesh")
     ap.add_argument("--mutate", action="store_true",
-                    help="insert triples mid-stream to demo invalidation")
+                    help="mutate mid-stream: a shape-stable delete/re-insert "
+                         "churn (warm-resumed plans) plus a dictionary-"
+                         "growing insert (cold invalidation)")
     args = ap.parse_args()
 
     mesh = None
@@ -66,14 +70,28 @@ def main() -> None:
         for _ in range(args.requests)
     ]
 
+    churn = None
+    if args.mutate:
+        g = db.graph
+        row = g.triples[0]
+        churn = [(g.node_names[row[0]], g.label_names[row[1]],
+                  g.node_names[row[2]])]
+
     t_all = time.perf_counter()
     with db.session(max_delay_ms=args.max_delay_ms,
                     max_pending=args.batch) as session:
         futures = [session.submit(q) for q in requests]
         if args.mutate:
-            # mid-stream update: bumps the version, invalidates stale plans
+            # shape-stable churn: delete + re-insert an existing triple —
+            # superseded plans are *resumable* (patched in place, next
+            # solve warm-starts from the previous fixpoint)
+            db.delete(churn)
+            mid = [session.submit(qq) for qq in requests[: args.batch]]
+            db.insert(churn)
+            # dictionary-growing insert: the classic *cold* invalidation
             db.insert([("DeptNew", "subOrganizationOf", unis[0]),
                        ("StudentNew", "memberOf", "DeptNew")])
+            futures += mid
         results = [f.result() for f in futures]
     total = time.perf_counter() - t_all
 
@@ -93,9 +111,17 @@ def main() -> None:
         f"({len(results)/total:.1f} req/s) over {session.flushes} flushes; "
         f"plan cache: {m.cache.hits} hits / {m.cache.misses} misses "
         f"({m.cache.hit_rate:.0%}), {m.plan_builds} plans built, "
-        f"{m.plan_invalidations} invalidated (v{db.version}), "
+        f"{m.plan_invalidations} cold-invalidated (v{db.version}), "
         f"engines={m.engine_counts}"
     )
+    if args.mutate:
+        print(
+            f"incremental maintenance: {m.plans_resumable} plans "
+            f"reclassified resumable, {m.plans_resumed} patched + resumed "
+            f"({m.warm_resume_solves} warm-started solves, "
+            f"{m.resumes_declined} declined), "
+            f"{m.adj_rebuilds_saved} adjacency rebuilds saved"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,372 @@
+"""Incremental dual-simulation maintenance (ISSUE 4; DESIGN.md Sect. 8):
+warm-resumed fixpoints equal cold re-solves across random insert/delete
+sequences for all five batched engines, superseded plans are classified
+resumable vs cold correctly, the delta log composes/truncates, and
+adjacency rebuilds are saved when a delta touches none of a plan's labels.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dualsim, pruning, soi, sparql
+from repro.core.graph import Graph, GraphDelta
+from repro.data import synth
+from repro.db import GraphDB
+from repro.engine.cost import resume_decision
+
+from tests._hyp import given, settings, st
+
+ALL_BATCHED = ("dense", "packed", "sparse", "jacobi_packed", "partitioned")
+
+MEMBERS_OF = "{{ ?d subOrganizationOf {uni} . ?s memberOf ?d }}"
+
+
+def _random_query(rng, n_labels: int, node_names):
+    from repro.core.sparql import And, BGP, Const, Optional_, Triple, Var
+
+    def term():
+        if rng.random() < 0.15:
+            return Const(str(node_names[rng.integers(len(node_names))]))
+        return Var(f"v{rng.integers(4)}")
+
+    def bgp():
+        return BGP(tuple(
+            Triple(term(), f"p{rng.integers(n_labels)}", term())
+            for _ in range(rng.integers(1, 4))
+        ))
+
+    q = bgp()
+    r = rng.random()
+    if r < 0.35:
+        q = And(q, bgp())
+    elif r < 0.7:
+        q = Optional_(q, bgp())
+    return q
+
+
+def _mutate(rng, g: Graph) -> tuple[Graph, set[int]]:
+    """One shape-stable random mutation: delete and/or insert a few edges
+    between existing nodes over existing labels.  Returns the new graph and
+    the set of labels whose edges were *inserted* (the destabilizers)."""
+    triples = g.triples
+    if len(triples) and rng.random() < 0.7:
+        keep = np.ones(len(triples), bool)
+        keep[rng.choice(len(triples),
+                        size=min(len(triples), int(rng.integers(1, 5))),
+                        replace=False)] = False
+        triples = triples[keep]
+    inserted_labels: set[int] = set()
+    if rng.random() < 0.7:
+        k = int(rng.integers(1, 5))
+        new = np.stack([
+            rng.integers(0, g.n_nodes, k),
+            rng.integers(0, g.n_labels, k),
+            rng.integers(0, g.n_nodes, k),
+        ], axis=1).astype(np.int32)
+        triples = np.vstack([triples, new])
+        inserted_labels = {int(x) for x in np.unique(new[:, 1])}
+    return Graph(g.n_nodes, g.n_labels, triples,
+                 g.node_names, g.label_names), inserted_labels
+
+
+def _check_resume_matches_worklist(seed: int) -> None:
+    """Across a random mutation sequence, resume_fixpoint from the previous
+    snapshot's chi equals the paper's cold solve_worklist fixpoint, for
+    every batched engine (acceptance property of ISSUE 4)."""
+    rng = np.random.default_rng(seed)
+    n_labels = int(rng.integers(1, 4))
+    g = synth.random_graph(
+        n_nodes=int(rng.integers(8, 40)),
+        n_labels=n_labels,
+        n_edges=int(rng.integers(10, 120)),
+        seed=seed + 1,
+    )
+    q = _random_query(rng, n_labels, g.node_names)
+    s = soi.build_soi(q)
+    chi_prev = {
+        eng: dualsim.solve_compiled(soi.compile_soi(s, g), g,
+                                    engine=eng, n_blocks=4)[0]
+        for eng in ALL_BATCHED
+    }
+    for _ in range(3):
+        g, ins_labels = _mutate(rng, g)
+        c = soi.compile_soi(s, g)
+        ref, _ = dualsim.solve_worklist(c, g)
+        for eng in ALL_BATCHED:
+            warm, _ = dualsim.resume_fixpoint(
+                c, g, chi_prev[eng], inserted_labels=ins_labels,
+                engine=eng, n_blocks=4,
+            )
+            assert np.array_equal(warm, ref), (
+                f"{eng} warm resume != cold worklist (seed {seed})"
+            )
+            chi_prev[eng] = warm
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_resume_equals_worklist_property(seed):
+    """Warm-resumed chi == cold worklist fixpoint on random mutation
+    sequences over random BGP/AND/OPTIONAL queries, all five engines."""
+    _check_resume_matches_worklist(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 5, 11])
+def test_resume_equals_worklist_fixed_seeds(seed):
+    """Deterministic slice of the property above (runs without hypothesis)."""
+    _check_resume_matches_worklist(seed)
+
+
+def test_destabilized_rows_closure():
+    # v0 -p0-> v1 -p1-> v2: inserting p1 edges may grow every row that
+    # (transitively) depends on a p1 operator, but only those
+    q = sparql.parse("{ ?a p0 ?b . ?b p1 ?c }")
+    g = synth.random_graph(n_nodes=10, n_labels=2, n_edges=30, seed=0)
+    c = soi.compile_soi(soi.build_soi(q), g)
+    grow = dualsim.destabilized_rows(c, {g.label_id("p1")})
+    # the p1 inequalities constrain b and c directly; a depends on b via p0
+    assert grow.all()
+    # deletions-only: nothing destabilizes
+    assert not dualsim.destabilized_rows(c, set()).any()
+    # a label no operator uses: nothing destabilizes
+    assert not dualsim.destabilized_rows(c, {999}).any()
+
+
+def test_destabilized_rows_stops_at_independent_component():
+    # two disconnected BGP components; inserting into one must not reseed
+    # the other (its constraint cone never reaches a touched operator)
+    q = sparql.parse("{ ?a p0 ?b } AND { ?c p1 ?d }")
+    g = synth.random_graph(n_nodes=10, n_labels=2, n_edges=30, seed=1)
+    s = soi.build_soi(q)
+    c = soi.compile_soi(s, g)
+    grow = dualsim.destabilized_rows(c, {g.label_id("p1")})
+    touched = {i for i in range(c.n_vars) if grow[i]}
+    p0_rows = {
+        int(x)
+        for lhs, rhs, m in zip(c.ineq_lhs, c.ineq_rhs, c.ineq_mat)
+        if c.mats[m][0] == g.label_id("p0")
+        for x in (lhs, rhs)
+    }
+    assert touched and not (touched & p0_rows)
+
+
+# --------------------------------------------------------------------- #
+# the delta log (GraphDB + GraphDelta)
+# --------------------------------------------------------------------- #
+def test_delta_log_records_and_composes():
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0))
+    v0 = db.version
+    g0 = db.graph
+    row = g0.triples[3]
+    t = (g0.node_names[row[0]], g0.label_names[row[1]], g0.node_names[row[2]])
+    db.delete([t])
+    d1 = db.delta_since(v0)
+    assert d1.shape_stable and not d1.has_insertions and d1.n_changes == 1
+    assert d1.touched_labels() == {int(row[1])}
+    db.insert([t])
+    # delete-then-reinsert composes to a no-op delta
+    d2 = db.delta_since(v0)
+    assert d2.n_changes == 0 and d2.shape_stable
+    # a dictionary-growing insert is not shape-stable
+    db.insert([("NewNode!", "subOrganizationOf", "Univ0")])
+    d3 = db.delta_since(v0)
+    assert not d3.shape_stable
+    # unknown / pre-log versions report as truncated
+    assert db.delta_since(-1) is None
+    assert db.delta_since(db.version) is None  # nothing to compose
+
+
+def test_delta_log_truncates():
+    from repro.db import graphdb as gdb_mod
+
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0))
+    g0 = db.graph
+    names, labels = g0.node_names, g0.label_names
+    v0 = db.version
+    limit = gdb_mod.DELTA_LOG_LIMIT
+    row = g0.triples[0]
+    t = (names[row[0]], labels[row[1]], names[row[2]])
+    for i in range(limit + 2):
+        # alternate delete/insert of one triple: every call is effective
+        assert (db.delete if i % 2 == 0 else db.insert)([t]) == 1
+    assert db.delta_since(v0) is None  # fell off the bounded log
+    assert db.delta_since(db.version - 2) is not None
+
+
+# --------------------------------------------------------------------- #
+# engine classification: resumable vs cold (tentpole acceptance)
+# --------------------------------------------------------------------- #
+def _direct_mask(q, g, engine="dense"):
+    mask = np.zeros(g.n_edges, dtype=bool)
+    for part in sparql.union_split(q):
+        s = soi.build_soi(part)
+        c = soi.compile_soi(s, g)
+        chi, _ = dualsim.solve_compiled(c, g, engine=engine)
+        m, _ = pruning.prune_triples(s, chi, g)
+        mask |= m
+    return mask
+
+
+@pytest.mark.parametrize("engine", ALL_BATCHED)
+def test_shape_stable_mutation_resumes_through_serving(engine):
+    from repro.engine import canonicalize
+
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0), engine=engine)
+    q = MEMBERS_OF.format(uni="Univ0")
+    db.query(q)
+    plan, _ = db._engine.plan_for(canonicalize(sparql.parse(q)), bucket=1)
+    traces0 = plan.metrics.traces
+    g = db.graph
+    row = g.triples[int(np.flatnonzero(
+        g.triples[:, 1] == g.label_id("memberOf"))[0])]
+    t = (g.node_names[row[0]], g.label_names[row[1]], g.node_names[row[2]])
+
+    assert db.delete([t]) == 1
+    r1 = db.query(q)
+    m1 = db.metrics()
+    assert m1.plans_resumable >= 1 and m1.plans_resumed >= 1
+    assert m1.warm_resume_solves >= 1
+    assert m1.cache.invalidations == 0  # nothing went cold
+    assert np.array_equal(r1.survivor_mask, _direct_mask(sparql.parse(q),
+                                                         db.graph))
+    assert db.insert([t]) == 1
+    r2 = db.query(q)
+    m2 = db.metrics()
+    assert m2.plans_resumed >= 2
+    assert np.array_equal(r2.survivor_mask, _direct_mask(sparql.parse(q),
+                                                         db.graph))
+    # the patched plan kept its operand shapes, so BOTH resumes re-ran the
+    # existing trace — the jitted fixpoint was never retraced
+    assert plan.metrics.traces == traces0
+    assert plan.metrics.patches == 2 and plan.metrics.warm_resumes == 2
+
+
+def test_dictionary_change_is_cold_never_resumed():
+    """Regression (ISSUE 4 satellite): a mutation that grows the dictionary
+    (new node or label) must be classified cold — the superseded plan is
+    never patched or warm-started."""
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0))
+    q = MEMBERS_OF.format(uni="Univ0")
+    db.query(q)
+    db.insert([("NodeFromTheFuture", "memberOf", "Univ0")])  # new node
+    r = db.query(q)
+    m = db.metrics()
+    assert m.plans_resumable == 0 and m.plans_resumed == 0
+    assert m.warm_resume_solves == 0
+    assert not r.cache_hit
+    assert np.array_equal(r.survivor_mask, _direct_mask(sparql.parse(q),
+                                                        db.graph))
+    # new *label* is equally cold
+    db.query(q)
+    db.insert([("Univ0", "labelFromTheFuture", "Univ1")])
+    db.query(q)
+    m = db.metrics()
+    assert m.plans_resumed == 0 and m.warm_resume_solves == 0
+
+
+def test_incremental_false_disables_resumption():
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0),
+                 incremental=False)
+    q = MEMBERS_OF.format(uni="Univ0")
+    db.query(q)
+    g = db.graph
+    row = g.triples[0]
+    t = (g.node_names[row[0]], g.label_names[row[1]], g.node_names[row[2]])
+    db.delete([t])
+    r = db.query(q)
+    m = db.metrics()
+    assert m.plans_resumable == 0 and m.plans_resumed == 0
+    assert np.array_equal(r.survivor_mask, _direct_mask(sparql.parse(q),
+                                                        db.graph))
+
+
+def test_resumed_plans_survive_multiple_versions():
+    # plan goes stale at v1, graph moves on to v3 before the template is
+    # queried again: the staged deltas compose and one patch catches up
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0))
+    q = MEMBERS_OF.format(uni="Univ0")
+    db.query(q)
+    g = db.graph
+    rows = [g.triples[i] for i in (0, 4, 9)]
+    ts = [(g.node_names[s], g.label_names[p], g.node_names[o])
+          for s, p, o in rows]
+    for t in ts:  # three separate version bumps, no queries in between
+        assert db.delete([t]) == 1
+    r = db.query(q)
+    m = db.metrics()
+    assert m.plans_resumed >= 1
+    assert np.array_equal(r.survivor_mask, _direct_mask(sparql.parse(q),
+                                                        db.graph))
+
+
+def test_adjacency_kept_when_labels_untouched():
+    """ISSUE 4 small fix: a delta that touches only label X must not drop
+    adjacency built for label-Y-only plans — the entries re-key to the new
+    snapshot and the saved rebuilds are counted."""
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0))
+    qa = MEMBERS_OF.format(uni="Univ0")  # subOrganizationOf + memberOf
+    qb = "{ ?p publicationAuthor ?s }"  # disjoint label set
+    db.query(qa)
+    db.query(qb)
+    g = db.graph
+    row = g.triples[int(np.flatnonzero(
+        g.triples[:, 1] == g.label_id("memberOf"))[0])]
+    t = (g.node_names[row[0]], g.label_names[row[1]], g.node_names[row[2]])
+    db.delete([t])
+    rb = db.query(qb)  # untouched template: adjacency upload is saved
+    m = db.metrics()
+    assert m.adj_rebuilds_saved >= 1
+    assert m.adj_invalidations == 0
+    assert np.array_equal(rb.survivor_mask, _direct_mask(sparql.parse(qb),
+                                                         db.graph))
+
+
+def test_session_stream_resumes_across_mutation():
+    db = GraphDB(synth.lubm_like(n_universities=2, seed=0))
+    reqs = [MEMBERS_OF.format(uni=f"Univ{i % 2}") for i in range(4)]
+    with db.session(max_delay_ms=1e6, max_pending=8) as s:
+        for f in [s.submit(r) for r in reqs]:
+            f.result()
+    g = db.graph
+    row = g.triples[2]
+    t = (g.node_names[row[0]], g.label_names[row[1]], g.node_names[row[2]])
+    db.delete([t])
+    with db.session(max_delay_ms=1e6, max_pending=8) as s:
+        futs = [s.submit(r) for r in reqs]
+        results = [f.result() for f in futs]
+    m = db.metrics()
+    assert m.plans_resumed >= 1
+    for rq, rs in zip(reqs, results):
+        assert np.array_equal(rs.survivor_mask,
+                              _direct_mask(sparql.parse(rq), db.graph)), rq
+
+
+# --------------------------------------------------------------------- #
+# cost model: the resume-vs-cold decision
+# --------------------------------------------------------------------- #
+def test_resume_decision_small_delta_resumes_large_goes_cold():
+    g = synth.random_graph(n_nodes=200, n_labels=3, n_edges=2000, seed=0)
+    c = soi.compile_soi(soi.build_soi(
+        sparql.parse("{ ?a p0 ?b . ?b p1 ?c }")), g)
+    small = resume_decision(g, c, engine="sparse", delta_edges=5,
+                            last_sweeps=6)
+    assert small.resume and small.est_resume < small.est_cold
+    big = resume_decision(g, c, engine="sparse",
+                          delta_edges=g.n_edges // 2, last_sweeps=6)
+    assert not big.resume
+    assert "cold" in big.reason and "resume" in small.reason
+
+
+def test_graph_delta_compose_cancellation():
+    mk = lambda ins, dele: GraphDelta(
+        inserted=np.asarray(ins, np.int32).reshape(-1, 3),
+        deleted=np.asarray(dele, np.int32).reshape(-1, 3),
+        nodes_before=5, nodes_after=5, labels_before=2, labels_after=2,
+    )
+    a = mk([[0, 0, 1]], [])
+    b = mk([], [[0, 0, 1], [2, 1, 3]])
+    ab = a.compose(b)
+    assert len(ab.inserted) == 0  # insert cancelled by the later delete
+    assert [list(r) for r in ab.deleted] == [[2, 1, 3]]
+    ba = b.compose(mk([[2, 1, 3]], []))
+    assert len(ba.deleted) == 1  # only the uncancelled delete remains
+    assert ba.touched_labels() == {0}

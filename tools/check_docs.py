@@ -1,0 +1,131 @@
+"""Documentation checks for the CI docs job (ISSUE 4 satellite).
+
+Two passes, both over the repository root this file sits under:
+
+1. **Cross-reference link check** — every markdown link target in README.md
+   / DESIGN.md must resolve, every backticked repo path (``src/...``,
+   ``tests/...``, ``benchmarks/...``, ...) must exist, and every
+   ``DESIGN.md Sect. N[.M]`` citation in README.md must name a section
+   heading that actually exists in DESIGN.md.
+2. **Docstring coverage** — a local mirror of the ruff pydocstyle subset CI
+   runs (``D100,D101,D102,D103,D104,D419``: missing/empty docstrings on
+   public modules, classes, methods and functions) over ``src/repro/db``
+   and ``src/repro/engine``, so the gate can run in environments without
+   ruff installed.
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "DESIGN.md"]
+DOCSTRING_DIRS = ["src/repro/db", "src/repro/engine"]
+PATH_DIRS = ("src/", "tests/", "benchmarks/", "examples/", "results/",
+             "tools/", ".github/")
+
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)#][^)]*)\)")
+BACKTICK_PATH = re.compile(r"`([A-Za-z0-9_./\-]+/[A-Za-z0-9_./\-]+)`")
+SECT_REF = re.compile(r"DESIGN\.md\s+Sect\.?\s+(\d+(?:\.\d+)?)")
+
+
+def check_links() -> list[str]:
+    """Resolve markdown links, backticked paths, and section citations."""
+    errors: list[str] = []
+    design = (ROOT / "DESIGN.md").read_text()
+    headings = set(
+        re.findall(r"^#{2,3}\s+(\d+(?:\.\d+)?)[. ]", design, re.MULTILINE)
+    )
+    for name in DOC_FILES:
+        path = ROOT / name
+        if not path.exists():
+            errors.append(f"{name}: file missing")
+            continue
+        text = path.read_text()
+        for target in MD_LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not (ROOT / target.split("#")[0]).exists():
+                errors.append(f"{name}: broken link -> {target}")
+        for target in BACKTICK_PATH.findall(text):
+            bare = target.rstrip("/")
+            if bare.startswith(PATH_DIRS) and not (ROOT / bare).exists():
+                errors.append(f"{name}: backticked path missing -> {target}")
+        for sect in SECT_REF.findall(text):
+            if sect not in headings and sect.split(".")[0] not in headings:
+                errors.append(
+                    f"{name}: cites DESIGN.md Sect. {sect}, "
+                    "but no such heading exists"
+                )
+    return errors
+
+
+def _missing_docstrings(tree: ast.Module, rel: str) -> list[str]:
+    """Public defs without a (non-empty) docstring — the D1xx mirror."""
+    errors: list[str] = []
+
+    def doc_ok(node) -> bool:
+        doc = ast.get_docstring(node)
+        return doc is not None and doc.strip() != ""
+
+    if not doc_ok(tree):
+        errors.append(f"{rel}: missing module docstring (D100/D104)")
+
+    def walk(body, prefix: str, in_class: bool) -> None:
+        for node in body:
+            if isinstance(node, (ast.If, ast.Try)):
+                walk(node.body, prefix, in_class)
+                continue
+            if not isinstance(
+                node, (ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                continue
+            if node.name.startswith("_"):
+                continue  # private / magic: outside the selected rule set
+            if not doc_ok(node):
+                kind = (
+                    "class (D101)" if isinstance(node, ast.ClassDef)
+                    else "method (D102)" if in_class
+                    else "function (D103)"
+                )
+                errors.append(
+                    f"{rel}:{node.lineno}: public {kind} "
+                    f"`{prefix}{node.name}` lacks a docstring"
+                )
+            if isinstance(node, ast.ClassDef):
+                walk(node.body, f"{prefix}{node.name}.", True)
+
+    walk(tree.body, "", False)
+    return errors
+
+
+def check_docstrings() -> list[str]:
+    """Run the docstring mirror over the public-API source dirs."""
+    errors: list[str] = []
+    for d in DOCSTRING_DIRS:
+        for py in sorted((ROOT / d).rglob("*.py")):
+            rel = str(py.relative_to(ROOT))
+            tree = ast.parse(py.read_text())
+            errors += _missing_docstrings(tree, rel)
+    return errors
+
+
+def main() -> int:
+    """Run both passes; exit non-zero (listing findings) on any failure."""
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        print(
+            f"docs OK: {', '.join(DOC_FILES)} cross-references resolve; "
+            f"docstring coverage holds in {', '.join(DOCSTRING_DIRS)}"
+        )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
