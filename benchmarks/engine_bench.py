@@ -24,6 +24,18 @@ contract of benchmarks/run.py) and written to results/bench/engine.json:
   simulated host devices (``XLA_FLAGS=--xla_force_host_platform_device_
   count=N``, set before the backend initializes) and the results JSON is
   written per engine (``engine.partitioned.json``).
+* ``packed_fused`` — sweep throughput of the end-to-end bit-packed engine
+  (ISSUE 5): repeated solves of one compiled SOI on identical packed
+  operands, normalized by sweep count, fused ``bitmm_apply`` path vs the
+  pre-existing ``packed`` engine (bitmm → unpack → gather → AND chain).
+  Every engine's chi — fused included — is asserted bit-identical to the
+  paper's sequential ``solve_worklist`` first.  The acceptance bar is a
+  >= 2x fused-over-packed sweep throughput; the run also appends a summary
+  record (req/s, warm/cold, fused-vs-packed speedup) to the top-level
+  ``BENCH_engine.json`` so the perf trajectory is visible across PRs.
+  ``--fused-only`` runs just this section and gates on the bar (the CI
+  perf-smoke step); ``--tiny`` runs without it skip the section so a CI
+  pipeline times the cross-engine sweep exactly once.
 * ``mutation`` (``--mutation``) — incremental maintenance under churn
   (DESIGN.md Sect. 8): at each mutation rate, a round deletes / re-inserts
   ``rate * |E|`` random edges against two databases fed identical updates —
@@ -48,8 +60,10 @@ import numpy as np
 from repro.data import synth
 from repro.db import GraphDB
 from repro.distributed import ctx as dctx
+from repro.engine.cost import ENGINES as ALL_ENGINES
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+BENCH_TOP = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
 
 
 def _mk_requests(db: GraphDB, n: int, seed: int = 0) -> list[str]:
@@ -149,6 +163,102 @@ def invalidation(graph, *, engine: str = "auto", mesh=None) -> dict:
     }
 
 
+def packed_fused(graph, *, reps: int = 5) -> dict:
+    """Sweep throughput: fused packed engine vs the packed baseline.
+
+    Both engines run the same Gauss–Seidel operator order on identical
+    packed operands, so they take identical sweep counts.  Two baselines
+    are timed: the packed engine in its *shipping* configuration (the
+    acceptance bar — on CPU that is the interpreted Pallas kernel, exactly
+    what ``plan.py`` serves today) and the packed engine on its pure-XLA
+    ``use_ref`` lowering (``fused_vs_xla_speedup`` — emulation overhead
+    removed, so the trajectory also records the representation + fusion
+    win alone).  Before timing, every batched engine's chi is asserted
+    bit-identical to the paper's sequential ``solve_worklist`` (ISSUE 5
+    acceptance).
+    """
+    import functools
+
+    import jax
+
+    from repro.core import dualsim, soi, sparql
+    from repro.kernels.bitmm import ops as bitmm_ops
+
+    q = sparql.parse("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }")
+    c = soi.compile_soi(soi.build_soi(q), graph)
+    ref, _ = dualsim.solve_worklist(c, graph)
+    for eng in ALL_ENGINES:
+        chi, _ = dualsim.solve_compiled(c, graph, engine=eng)
+        assert np.array_equal(chi, ref), \
+            f"{eng} chi diverged from solve_worklist"
+
+    ops = dualsim.make_packed_operands(c, graph)
+
+    @functools.partial(jax.jit)
+    def solve_packed_xla(ops):
+        # the packed baseline minus kernel emulation: same bool-chi sweep,
+        # boolean product via the pure-jnp bitmm oracle
+        def propagate_m(chi, m):
+            return bitmm_ops.bitmm(chi, ops.adj_packed[m], use_ref=True)
+
+        return dualsim._fixpoint(propagate_m, ops, None, None, None)
+
+    def timed(solve):
+        chi, sweeps = solve(ops)  # warmup: compile outside the timing
+        np.asarray(chi)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            chi, sweeps = solve(ops)
+            np.asarray(chi)  # block on the result
+        return (time.perf_counter() - t0) / reps, int(sweeps), np.asarray(chi)
+
+    t_packed, s_packed, chi_p = timed(dualsim.solve_packed)
+    t_xla, s_xla, chi_x = timed(solve_packed_xla)
+    t_fused, s_fused, chi_f = timed(dualsim.solve_packed_fused)
+    for chi in (chi_p, chi_x, chi_f):
+        assert np.array_equal(chi, ref), \
+            "timed solves diverged from solve_worklist"
+    per_packed = t_packed / max(s_packed, 1)
+    per_xla = t_xla / max(s_xla, 1)
+    per_fused = t_fused / max(s_fused, 1)
+    return {
+        "bench": "packed_fused",
+        "sweeps": s_fused,
+        "t_packed": t_packed,
+        "t_packed_xla": t_xla,
+        "t_fused": t_fused,
+        "sweeps_per_s_packed": 1.0 / per_packed,
+        "sweeps_per_s_packed_xla": 1.0 / per_xla,
+        "sweeps_per_s_fused": 1.0 / per_fused,
+        "fused_speedup": per_packed / per_fused,
+        "fused_vs_xla_speedup": per_xla / per_fused,
+        "bit_identical": True,
+    }
+
+
+def append_bench_summary(entry: dict) -> None:
+    """Append one run record to the top-level ``BENCH_engine.json``.
+
+    Append-style on purpose: the *committed* file is the cross-PR perf
+    trajectory — each PR that deliberately refreshes the bench commits the
+    appended records (regressions were invisible while BENCH history
+    stayed empty).  CI's uploaded copy is a per-run snapshot on top of
+    that history, not the accumulation mechanism itself.
+    """
+    hist = []
+    if os.path.exists(BENCH_TOP):
+        try:
+            with open(BENCH_TOP) as f:
+                hist = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            hist = []
+    if not isinstance(hist, list):
+        hist = [hist]
+    hist.append(entry)
+    with open(BENCH_TOP, "w") as f:
+        json.dump(hist, f, indent=1, default=str)
+
+
 def mutation(graph, *, engine: str = "auto", rates=(0.001, 0.01),
              rounds: int = 5, mesh=None) -> list[dict]:
     """Warm-resume vs cold re-solve latency under insert/delete churn.
@@ -220,8 +330,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--universities", type=int, default=8)
     ap.add_argument("--engine", default="auto",
-                    choices=["auto", "dense", "packed", "sparse",
-                             "jacobi_packed", "partitioned"])
+                    choices=["auto", *ALL_ENGINES])
     ap.add_argument("--devices", type=int, default=0,
                     help="mesh of N simulated host devices (default: 8 for "
                          "--engine partitioned, else no mesh)")
@@ -229,6 +338,9 @@ def main() -> None:
     ap.add_argument("--mutation", action="store_true",
                     help="also run the incremental-maintenance section and "
                          "write results/bench/engine.incremental.json")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="run only the packed_fused sweep-throughput section "
+                         "(CI perf smoke) and append to BENCH_engine.json")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke mode: small graph, few requests")
     args = ap.parse_args()
@@ -248,6 +360,47 @@ def main() -> None:
     print(f"# database: {graph.n_edges} triples / {graph.n_nodes} nodes"
           + (f" on a mesh of {args.devices} devices" if mesh is not None else ""))
 
+    # the fused section runs once per CI pipeline: the dedicated
+    # --fused-only perf-smoke step covers --tiny runs, full runs keep it
+    fused = None
+    if args.fused_only or not args.tiny:
+        fused = packed_fused(graph, reps=3 if args.tiny else 5)
+        fused["n_devices"] = max(args.devices, 1)
+        ok_fused = fused["fused_speedup"] >= 2.0
+        # sanity floor on the honest ratio: vs the packed engine's pure-XLA
+        # lowering the fused path should at worst be in the same ballpark
+        # even on toy graphs where the bool einsum is competitive (observed
+        # 1.1-1.9x on the --tiny graph, 2.7x at full size) — a big
+        # words-path regression shows here long before it dents the
+        # (interpret-inflated) shipping-config bar above; 0.5 keeps the
+        # floor out of shared-runner noise
+        ok_xla = fused["fused_vs_xla_speedup"] >= 0.5
+        print(f"engine/packed_fused,{fused['t_fused']*1e6:.1f},"
+              f"sweep_speedup={fused['fused_speedup']:.1f}x")
+        print(f"# fused sweep throughput {fused['fused_speedup']:.1f}x over "
+              f"packed ({'meets' if ok_fused else 'BELOW'} the 2x acceptance "
+              f"bar), {fused['fused_vs_xla_speedup']:.1f}x over the packed "
+              f"engine's pure-XLA lowering; chi bit-identical to "
+              f"solve_worklist across all engines")
+    if args.fused_only:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, "engine.packed_fused.json"), "w") as f:
+            json.dump([fused], f, indent=1, default=str)
+        append_bench_summary({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "engine": args.engine,
+            "tiny": bool(args.tiny),
+            "n_devices": max(args.devices, 1),
+            "fused_vs_packed_sweep_speedup": fused["fused_speedup"],
+            "fused_vs_xla_speedup": fused["fused_vs_xla_speedup"],
+            "fused_sweeps_per_s": fused["sweeps_per_s_fused"],
+            "packed_sweeps_per_s": fused["sweeps_per_s_packed"],
+        })
+        # the CI perf-smoke gate: a regression on either ratio fails the job
+        if not (ok_fused and ok_xla):
+            raise SystemExit(1)
+        return
+
     warm_iters = 5 if args.tiny else 20
     batch_sizes = (1, 4) if args.tiny else (1, 4, 8, 16)
     rows = [cold_warm(graph, engine=args.engine, warm_iters=warm_iters,
@@ -263,7 +416,7 @@ def main() -> None:
     # single-device trajectory (CI uploads results/bench/*.json)
     name = "engine.json" if args.engine == "auto" else f"engine.{args.engine}.json"
     with open(os.path.join(RESULTS, name), "w") as f:
-        json.dump(rows, f, indent=1, default=str)
+        json.dump(rows + ([fused] if fused else []), f, indent=1, default=str)
 
     mut_rows = []
     if args.mutation:
@@ -293,6 +446,24 @@ def main() -> None:
         best = max(r["speedup"] for r in mut_rows if r["rate"] <= 0.01)
         print(f"# warm-resume speedup {best:.1f}x at <=1% mutation rate "
               f"({'meets' if best >= 5.0 else 'BELOW'} the 5x acceptance bar)")
+
+    append_bench_summary({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "engine": args.engine,
+        "tiny": bool(args.tiny),
+        "n_devices": max(args.devices, 1),
+        "req_per_s_best": max(r["req_per_s"] for r in rows[1:-1]),
+        "t_cold": cw["t_cold"],
+        "t_warm": cw["t_warm"],
+        "warm_speedup": cw["speedup"],
+        "fused_vs_packed_sweep_speedup": fused["fused_speedup"] if fused else None,
+        "fused_vs_xla_speedup": fused["fused_vs_xla_speedup"] if fused else None,
+        "fused_sweeps_per_s": fused["sweeps_per_s_fused"] if fused else None,
+        "packed_sweeps_per_s": fused["sweeps_per_s_packed"] if fused else None,
+        "mutation_best_speedup": (
+            max(r["speedup"] for r in mut_rows) if mut_rows else None
+        ),
+    })
 
 
 if __name__ == "__main__":

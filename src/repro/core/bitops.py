@@ -48,6 +48,32 @@ def unpack(packed: jax.Array, n: int) -> jax.Array:
     return bits[..., :n].astype(jnp.bool_)
 
 
+def pack_np(bits: np.ndarray) -> np.ndarray:
+    """Host-side :func:`pack`: numpy in, ``uint32`` words out, same layout.
+
+    Used where device round trips would defeat the purpose — building the
+    packed Eq.-13 init once per plan and storing bit-packed chi memos that
+    feed straight back into a packed solver.  Assumes a little-endian host
+    (the ``uint8 -> uint32`` view identifies byte k with bits ``8k..8k+7``),
+    which matches every platform jaxlib ships for.
+    """
+    bits = np.asarray(bits, dtype=bool)
+    packed8 = np.packbits(bits, axis=-1, bitorder="little")
+    pad = (-packed8.shape[-1]) % 4
+    if pad:
+        packed8 = np.concatenate(
+            [packed8, np.zeros(packed8.shape[:-1] + (pad,), np.uint8)], axis=-1
+        )
+    return np.ascontiguousarray(packed8).view(np.uint32)
+
+
+def unpack_np(packed: np.ndarray, n: int) -> np.ndarray:
+    """Host-side :func:`unpack`: inverse of :func:`pack_np`."""
+    packed8 = np.ascontiguousarray(np.asarray(packed, np.uint32)).view(np.uint8)
+    bits = np.unpackbits(packed8, axis=-1, bitorder="little")
+    return bits[..., :n].astype(bool)
+
+
 def popcount(packed: jax.Array) -> jax.Array:
     """Total number of set bits over the last axis (int32)."""
     cnt = jax.lax.population_count(packed)
@@ -56,11 +82,9 @@ def popcount(packed: jax.Array) -> jax.Array:
 
 def any_set(packed: jax.Array) -> jax.Array:
     """Whether any bit is set along the last axis."""
-    acc = jnp.zeros(packed.shape[:-1], dtype=_BIT_DTYPE)
-    acc = jnp.bitwise_or(acc, jax.lax.reduce(
+    return jax.lax.reduce(
         packed, _BIT_DTYPE.dtype.type(0), jax.lax.bitwise_or, (packed.ndim - 1,)
-    ))
-    return acc != 0
+    ) != 0
 
 
 def band(a: jax.Array, b: jax.Array) -> jax.Array:

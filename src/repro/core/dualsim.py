@@ -6,14 +6,24 @@ Four engines compute the largest solution of a compiled SOI:
   matmul per (label, direction) operator per sweep.  This is the MXU path:
   ``Y = chi @ A`` in ``dtype`` (bf16 on TPU) followed by ``> 0``.
 * ``solve_packed`` — same sweep over bit-packed ``uint32`` adjacency via the
-  Pallas ``bitmm`` kernel (64x less HBM traffic than bf16 dense).
+  Pallas ``bitmm`` kernel (64x less HBM traffic than bf16 dense); chi is
+  boolean between kernel calls (the pre-ISSUE-5 baseline the fused engine
+  is benchmarked against).
+* ``solve_packed_fused`` — the paper's Sect.-3.2 representation end to end:
+  chi stays bit-packed ``uint32 [V, nw]`` through the whole
+  ``lax.while_loop`` and one fused ``bitmm_apply`` launch per operator does
+  product + AND-combine + changed detection on packed words (DESIGN.md
+  Sect. 9).
 * ``solve_sparse`` — edge-list engine: the boolean product is a gather +
   ``segment_max`` over edges, i.e. message passing in the OR-AND semiring.
   ``mode="gs"`` is paper-faithful Gauss–Seidel; ``mode="jacobi_packed"``
-  reads one bit-packed frontier broadcast per sweep.
+  carries bit-packed chi through the loop and reads frontier bits straight
+  out of the packed words — the former per-sweep pack→broadcast→unpack
+  round trip is gone.
 * ``solve_partitioned`` — destination-partitioned (vertex-cut) edge blocks
-  over a device mesh: block-local segment reductions, one n/8-byte packed
-  chi broadcast of cross-shard traffic per sweep (DESIGN.md Sect. 7).
+  over a device mesh: block-local segment reductions over a bit-packed chi
+  state; the ONLY cross-shard traffic per sweep is replicating the n/8-byte
+  packed words chi already lives in (DESIGN.md Sect. 7 / 9).
 * ``solve_worklist`` — the paper's own sequential strategy (Sect. 3.2 steps
   1–2 with the Sect. 3.3 heuristics); numpy, used for Table-2 parity and
   iteration-count studies.
@@ -83,6 +93,21 @@ def _per_mat_tables(c: CompiledSOI) -> tuple[tuple, tuple]:
     return mat_rhs, mat_table
 
 
+def _mat_lhs_flags(c: CompiledSOI) -> tuple:
+    """Per-operator [V, V] inequality flag matrices for the fused kernel.
+
+    ``flags[m][l, r] = 1`` iff the SOI holds ``chi[l] <= chi[r] ×b M_m``;
+    ``bitmm_apply`` turns the AND-combine into a tiny masked OR-reduce
+    (``chi[l] &= ~OR_{r:F[l,r]} ~y[r]``) so no gather tables enter the
+    kernel.  Semantically identical to ``mat_rhs``/``mat_table`` (duplicate
+    inequalities collapse idempotently under AND).
+    """
+    flags = [np.zeros((c.n_vars, c.n_vars), np.uint32) for _ in c.mats]
+    for l, r, m in zip(c.ineq_lhs, c.ineq_rhs, c.ineq_mat):
+        flags[m][l, r] = 1
+    return tuple(jnp.asarray(f) for f in flags)
+
+
 def _copy_tables(c: CompiledSOI) -> tuple[jax.Array, jax.Array]:
     by_copy: list[list[int]] = [[] for _ in range(c.n_vars)]
     for i, l in enumerate(c.copy_lhs):
@@ -108,6 +133,12 @@ class Operands:
     mat_table: tuple  # per mat: int32 [V, K_m] (padded with I_m)
     copy_rhs: jax.Array  # int32 [C]
     var_copy: jax.Array  # int32 [V, Kc]  (padded with C)
+    # packed-chi extras (ISSUE 5): host-packed init and per-mat [V, V]
+    # inequality flag matrices; optional so hand-built / abstract Operands
+    # stay valid (the packed engines fall back to packing init on device,
+    # and only the fused engine requires the flags)
+    init_packed: jax.Array | None = None  # uint32 [V, nw]
+    mat_lhs_flags: tuple | None = None  # per mat: uint32 [V, V]
     adj_dense: jax.Array | None = None  # bool [M, n, n]
     adj_packed: jax.Array | None = None  # uint32 [M, n, nw]
     edge_src: tuple | None = None  # per-mat int32 [E_m] source nodes
@@ -124,8 +155,12 @@ def _base_operands(c: CompiledSOI) -> dict:
     copy_rhs, var_copy = _copy_tables(c)
     return dict(
         init=jnp.asarray(c.init),
+        # packed once on the host: the packed-chi engines start their
+        # while_loop from this without ever packing on device
+        init_packed=jnp.asarray(bitops.pack_np(c.init)),
         mat_rhs=mat_rhs,
         mat_table=mat_table,
+        mat_lhs_flags=_mat_lhs_flags(c),
         copy_rhs=copy_rhs,
         var_copy=var_copy,
     )
@@ -285,7 +320,9 @@ def make_partitioned_operands(
     )
     base = _base_operands(c)
     if n_pad != n:
-        base["init"] = jnp.pad(base["init"], ((0, 0), (0, n_pad - n)))
+        init_np = np.pad(np.asarray(c.init, bool), ((0, 0), (0, n_pad - n)))
+        base["init"] = jnp.asarray(init_np)
+        base["init_packed"] = jnp.asarray(bitops.pack_np(init_np))
     return Operands(edge_src_b=src_b, edge_dst_b=dst_b, **base)
 
 
@@ -320,7 +357,7 @@ def patch_operands(
     touched = [
         m for m, (la, _) in enumerate(c_new.mats) if la in touched_labels
     ]
-    init = jnp.asarray(c_new.init)
+    init_np = np.asarray(c_new.init, bool)
     # the shared adjacency cache keys on graph identity, so a sibling plan
     # that already patched against this same snapshot is a hit and the
     # patch closure below never runs twice per (layout, mats, graph)
@@ -365,7 +402,7 @@ def patch_operands(
         n_pad = padded_node_count(n, n_blocks)
         n_local = n_pad // n_blocks
         if n_pad != n:
-            init = jnp.pad(init, ((0, 0), (0, n_pad - n)))
+            init_np = np.pad(init_np, ((0, 0), (0, n_pad - n)))
 
         def patch_blocks():
             src_b, dst_b = list(ops.edge_src_b), list(ops.edge_dst_b)
@@ -398,7 +435,12 @@ def patch_operands(
         kw["edge_src"], kw["edge_dst"] = _cached_adj(
             adj_cache, ("sparse", tuple(c_new.mats)), g, patch_edges
         )
-    return dataclasses.replace(ops, init=init, **kw)
+    return dataclasses.replace(
+        ops,
+        init=jnp.asarray(init_np),
+        init_packed=jnp.asarray(bitops.pack_np(init_np)),
+        **kw,
+    )
 
 
 def destabilized_rows(c: CompiledSOI, inserted_labels: set[int]) -> np.ndarray:
@@ -460,13 +502,21 @@ def _replicated(spec):
     return jax.sharding.PartitionSpec()
 
 
-def _apply_mat(chi: jax.Array, y: jax.Array, m: int, ops: Operands) -> jax.Array:
-    """chi[l] &= y[rhs_l] for every inequality of operator m (gather-only)."""
-    n = chi.shape[-1]
+def _per_var_mask(y: jax.Array, m: int, ops: Operands) -> jax.Array:
+    """``AND_{(l,r) in ineqs_m} y[r]`` per LHS variable l (gather-only).
+
+    Returns bool [V, n]; rows with no operator-m inequality are all-True
+    (the padded table entry points at an appended all-ones row).
+    """
+    n = y.shape[-1]
     vals = y[ops.mat_rhs[m]]  # [I_m, n]
     vals = jnp.concatenate([vals, jnp.ones((1, n), vals.dtype)])
-    per_var = jnp.all(vals[ops.mat_table[m]], axis=1)  # [V, n]
-    return jnp.logical_and(chi, per_var)
+    return jnp.all(vals[ops.mat_table[m]], axis=1)  # [V, n]
+
+
+def _apply_mat(chi: jax.Array, y: jax.Array, m: int, ops: Operands) -> jax.Array:
+    """chi[l] &= y[rhs_l] for every inequality of operator m."""
+    return jnp.logical_and(chi, _per_var_mask(y, m, ops))
 
 
 def _apply_copies(chi: jax.Array, ops: Operands) -> jax.Array:
@@ -477,6 +527,29 @@ def _apply_copies(chi: jax.Array, ops: Operands) -> jax.Array:
     cvals = jnp.concatenate([cvals, jnp.ones((1, n), cvals.dtype)])
     per_var = jnp.all(cvals[ops.var_copy], axis=1)
     return jnp.logical_and(chi, per_var)
+
+
+# numpy scalar on purpose: a jnp constant here would initialize the JAX
+# backend at import time (breaking XLA_FLAGS device-count forcing)
+_ALL_ONES = np.uint32(0xFFFFFFFF)
+
+
+def _apply_copies_packed(chi_p: jax.Array, ops: Operands) -> jax.Array:
+    """Copy inequalities on bit-packed chi: word-wise gathers and ANDs.
+
+    The appended pad row is all-ones *including* trailing pad bits — AND is
+    its identity, and chi's own pad bits are already zero, so no pad bit can
+    ever turn on (the invariant the packed convergence test relies on).
+    """
+    if ops.copy_rhs.shape[0] == 0:
+        return chi_p
+    nw = chi_p.shape[-1]
+    cvals = chi_p[ops.copy_rhs]  # [C, nw]
+    cvals = jnp.concatenate([cvals, jnp.full((1, nw), _ALL_ONES)])
+    per_var = jax.lax.reduce(
+        cvals[ops.var_copy], _ALL_ONES, jax.lax.bitwise_and, (1,)
+    )  # [V, nw]
+    return jnp.bitwise_and(chi_p, per_var)
 
 
 def _sweep_fixpoint(
@@ -511,12 +584,25 @@ def _sweep_fixpoint(
     return chi, it
 
 
-def _packed_frontier(chi: jax.Array, chi_spec=None) -> jax.Array:
-    """Bit-pack chi and replicate it: ONE n/8-byte broadcast serves every
-    operator of a Jacobi sweep (vs M chi-sized gathers under Gauss–Seidel)."""
-    packed = bitops.pack(chi)  # [V, n/32] uint32
-    packed = _wsc(packed, _replicated(chi_spec))
-    return bitops.unpack(packed, chi.shape[-1])  # replicated bool [V, n]
+def _replicated_frontier(chi_p: jax.Array, chi_spec=None) -> jax.Array:
+    """Replicate the packed chi words across the mesh: ONE n/8-byte
+    broadcast serves every operator of a Jacobi sweep (vs M chi-sized
+    gathers under Gauss–Seidel).  chi already *is* packed words now, so on
+    a single device (``chi_spec is None``) this is the identity — the old
+    per-sweep pack→broadcast→unpack round trip is gone entirely."""
+    if chi_spec is None:
+        return chi_p
+    return _wsc(chi_p, _replicated(chi_spec))
+
+
+def _edge_bits(frontier_p: jax.Array, src: jax.Array) -> jax.Array:
+    """Per-edge source bits gathered straight out of packed frontier words.
+
+    ``int8 [V, E]``: bit ``src[e] % 32`` of word ``src[e] // 32`` — the
+    gathered table is 32x smaller than a boolean frontier.
+    """
+    word = frontier_p[:, src // 32]  # [V, E] uint32
+    return ((word >> (src % 32).astype(jnp.uint32)) & 1).astype(jnp.int8)
 
 
 def _warm_init(ops: Operands, chi0: jax.Array | None) -> jax.Array:
@@ -531,6 +617,62 @@ def _warm_init(ops: Operands, chi0: jax.Array | None) -> jax.Array:
     if chi0 is None:
         return ops.init
     return jnp.logical_and(ops.init, chi0)
+
+
+def _packed_start(ops: Operands, chi0: jax.Array | None) -> jax.Array:
+    """:func:`_warm_init` for the packed-chi engines — all on uint32 words.
+
+    ``chi0`` may be bool ``[V, n]`` or already-packed ``uint32 [V, nw]``;
+    the packed form is what the plan cache's chi memo feeds back, with no
+    unpack round trip anywhere between memo and while_loop.
+    """
+    init_p = ops.init_packed
+    if init_p is None:  # hand-built Operands: pack once, outside the loop
+        init_p = bitops.pack(ops.init)
+    if chi0 is None:
+        return init_p
+    if not jnp.issubdtype(jnp.asarray(chi0).dtype, jnp.unsignedinteger):
+        chi0 = bitops.pack(chi0)
+    return jnp.bitwise_and(init_p, chi0)
+
+
+def _jacobi_packed_fixpoint(
+    propagate: Callable[[jax.Array, int], jax.Array],
+    ops: Operands,
+    max_sweeps: int | None,
+    chi_spec=None,
+    chi0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Shared driver of the packed-state Jacobi engines (jacobi_packed,
+    partitioned).  Per sweep: ONE replicate of the packed chi words serves
+    every operator, ``propagate(frontier_p, m)`` produces operator m's
+    boolean ``y`` (a segment reduce — JAX has no segmented OR, so y lands
+    in bool), all per-operator shrink masks AND together (Jacobi:
+    order-free) and fold into chi with a single pack, then the word-wise
+    copy step.  chi itself never round-trips; convergence is the word-level
+    ``new != chi`` of :func:`_sweep_fixpoint`.  Returns (bool chi, sweeps),
+    unpacked once after the fixpoint.
+    """
+    n = ops.init.shape[-1]
+    n_mats = len(ops.mat_rhs)
+
+    def sweep(chi_p: jax.Array) -> jax.Array:
+        frontier_p = _replicated_frontier(chi_p, chi_spec)
+        shrink = None
+        for m in range(n_mats):
+            y = _wsc(propagate(frontier_p, m), chi_spec)
+            pv = _per_var_mask(y, m, ops)
+            shrink = pv if shrink is None else jnp.logical_and(shrink, pv)
+        if shrink is not None:
+            chi_p = _wsc(
+                jnp.bitwise_and(chi_p, bitops.pack(shrink)), chi_spec
+            )
+        return _apply_copies_packed(chi_p, ops)
+
+    chi_p, it = _sweep_fixpoint(
+        sweep, _packed_start(ops, chi0), max_sweeps, chi_spec
+    )
+    return bitops.unpack(chi_p, n), it
 
 
 def _fixpoint(
@@ -573,16 +715,87 @@ def solve_dense(
     jax.jit, static_argnames=("max_sweeps", "interpret", "chi_spec")
 )
 def solve_packed(
-    ops: Operands, *, max_sweeps: int | None = None, interpret: bool = True,
-    chi_spec=None, chi0: jax.Array | None = None,
+    ops: Operands, *, max_sweeps: int | None = None,
+    interpret: bool | None = None, chi_spec=None,
+    chi0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Sweeps over bit-packed adjacency via the Pallas bitmm kernel."""
+    """Sweeps over bit-packed adjacency via the Pallas bitmm kernel.
+
+    chi itself stays boolean between kernel calls — this is the baseline
+    the fused engine (:func:`solve_packed_fused`) is measured against.
+    ``interpret=None`` auto-detects the backend (interpret only on CPU), so
+    direct callers no longer silently interpret the kernel on accelerators.
+    """
     from repro.kernels.bitmm import ops as bitmm_ops
 
     def propagate_m(chi: jax.Array, m: int) -> jax.Array:
         return bitmm_ops.bitmm(chi, ops.adj_packed[m], interpret=interpret)
 
     return _fixpoint(propagate_m, ops, max_sweeps, chi_spec, chi0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_sweeps", "impl", "chi_spec"))
+def solve_packed_fused(
+    ops: Operands, *, max_sweeps: int | None = None, impl: str | None = None,
+    chi_spec=None, chi0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Bit-packed chi end to end: one fused launch per operator application.
+
+    The ``lax.while_loop`` carries ``uint32 [V, nw]`` — 32x less state than
+    the boolean engines — and every sweep is ``M`` ``bitmm_apply`` calls
+    (packed product + AND-combine + changed words in one grid) plus the
+    word-wise copy step.  Convergence comes from the kernels' own changed
+    flags; chi is unpacked exactly once, after the fixpoint (DESIGN.md
+    Sect. 9).
+
+    ``impl``: ``"kernel"`` (compiled Pallas), ``"interpret"`` (Pallas in
+    interpret mode), ``"words"`` (pure-jnp word-wise lowering), or ``None``
+    for backend auto-detection — kernel on accelerators, words on CPU,
+    where XLA beats kernel emulation ~9x.
+    """
+    from repro.kernels.bitmm import ops as bitmm_ops
+
+    if impl is None:
+        impl = "words" if jax.default_backend() == "cpu" else "kernel"
+    n = ops.init.shape[-1]
+    n_mats = len(ops.mat_rhs)
+
+    def apply_m(chi_p: jax.Array, m: int) -> tuple[jax.Array, jax.Array]:
+        if impl == "words":
+            from repro.kernels.bitmm import ref as bitmm_ref
+
+            return bitmm_ref.bitmm_apply_words(
+                chi_p, ops.adj_packed[m], ops.mat_lhs_flags[m]
+            )
+        return bitmm_ops.bitmm_apply(
+            chi_p, ops.adj_packed[m], ops.mat_lhs_flags[m],
+            interpret=(impl == "interpret"),
+        )
+
+    def cond(state):
+        return state[2]
+
+    def body(state):
+        chi_p, it, _ = state
+        changed = jnp.uint32(0)
+        for m in range(n_mats):
+            chi_p, ch = apply_m(chi_p, m)
+            chi_p = _wsc(chi_p, chi_spec)
+            changed = jnp.bitwise_or(changed, jnp.uint32(ch))
+        before = chi_p
+        chi_p = _apply_copies_packed(chi_p, ops)
+        moved = jnp.logical_or(changed != 0, jnp.any(chi_p != before))
+        if max_sweeps is not None:
+            moved = jnp.logical_and(moved, it + 1 < max_sweeps)
+        return chi_p, it + 1, moved
+
+    state = (
+        _wsc(_packed_start(ops, chi0), chi_spec),
+        jnp.int32(0),
+        jnp.bool_(True),
+    )
+    chi_p, it, _ = jax.lax.while_loop(cond, body, state)
+    return bitops.unpack(chi_p, n), it
 
 
 @functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec", "mode"))
@@ -600,11 +813,13 @@ def solve_sparse(
     * ``"gs"`` (paper-faithful): operators applied sequentially within a
       sweep — fewest sweeps, but every operator re-gathers the
       freshly-updated chi (O(M) chi-sized collectives per sweep).
-    * ``"jacobi_packed"`` (beyond-paper, §Perf): all operators read ONE
-      bit-packed broadcast of chi per sweep — 32x fewer collective bytes
-      per gather and a single gather for all M operators, at the cost of
-      more sweeps (Jacobi vs Gauss–Seidel).  Same fixpoint either way
-      (monotone operator on a finite lattice).
+    * ``"jacobi_packed"`` (beyond-paper, §Perf): chi lives bit-packed
+      through the whole while_loop; all operators read frontier bits out
+      of ONE replicated copy of the packed words per sweep — 32x fewer
+      collective bytes, no per-sweep pack/unpack round trip, word-wise
+      convergence test.  The freshly segment-reduced y is packed once per
+      sweep (JAX has no segmented OR, so the reduce lands in bool).  Same
+      fixpoint either way (monotone operator on a finite lattice).
     """
     n = ops.init.shape[-1]
 
@@ -618,17 +833,14 @@ def solve_sparse(
     if mode != "jacobi_packed":
         raise ValueError(f"unknown sparse mode {mode!r}")
 
-    n_mats = len(ops.mat_rhs)
+    def propagate_bits(frontier_p: jax.Array, m: int) -> jax.Array:
+        msgs = _edge_bits(frontier_p, ops.edge_src[m])  # int8 [V, E_m]
+        y = jax.ops.segment_max(msgs.T, ops.edge_dst[m], num_segments=n)
+        return jnp.maximum(y, 0).T > 0  # [V, n]
 
-    def sweep(chi: jax.Array) -> jax.Array:
-        # one bit-packed replicate of chi serves every operator this sweep
-        frontier = _packed_frontier(chi, chi_spec)
-        for m in range(n_mats):
-            y = propagate_from(frontier, m)
-            chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
-        return _apply_copies(chi, ops)
-
-    return _sweep_fixpoint(sweep, _warm_init(ops, chi0), max_sweeps, chi_spec)
+    return _jacobi_packed_fixpoint(
+        propagate_bits, ops, max_sweeps, chi_spec, chi0
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec"))
@@ -640,33 +852,31 @@ def solve_partitioned(
 
     Edges are pre-partitioned by destination chi-block
     (:func:`make_partitioned_operands`), so every segment reduction is
-    block-local; the ONLY cross-shard traffic per sweep is one bit-packed
-    broadcast of chi (n/8 bytes instead of M chi-sized all-gathers plus
-    scatter all-reduces).  Jacobi sweeps (all operators read the same
-    frontier); same fixpoint as the other engines.
+    block-local; chi lives bit-packed through the while_loop, and the ONLY
+    cross-shard traffic per sweep is replicating the n/8-byte packed words
+    chi already is (instead of M chi-sized all-gathers plus scatter
+    all-reduces — and, since ISSUE 5, instead of a pack/unpack kernel pair
+    per sweep).  Jacobi sweeps (all operators read the same frontier); same
+    fixpoint as the other engines.
     """
     v, n = ops.init.shape
     w = ops.edge_src_b[0].shape[0]
     n_local = n // w
-    n_mats = len(ops.mat_rhs)
 
-    def sweep(chi: jax.Array) -> jax.Array:
-        frontier = _packed_frontier(chi, chi_spec)
-        for m in range(n_mats):
-            def block(src_w, dst_w):
-                msgs = frontier[:, src_w].astype(jnp.int8)  # [V, Eb]
-                yb = jax.ops.segment_max(
-                    msgs.T, dst_w, num_segments=n_local
-                )  # [n_local, V]; pad rows (dst=n_local) dropped
-                return jnp.maximum(yb, 0)
+    def propagate_blocks(frontier_p: jax.Array, m: int) -> jax.Array:
+        def block(src_w, dst_w):
+            msgs = _edge_bits(frontier_p, src_w)  # int8 [V, Eb]
+            yb = jax.ops.segment_max(
+                msgs.T, dst_w, num_segments=n_local
+            )  # [n_local, V]; pad rows (dst=n_local) dropped
+            return jnp.maximum(yb, 0)
 
-            yw = jax.vmap(block)(ops.edge_src_b[m], ops.edge_dst_b[m])
-            y = yw.transpose(2, 0, 1).reshape(v, n) > 0  # [V, n], block-major
-            y = _wsc(y, chi_spec)
-            chi = _wsc(_apply_mat(chi, y, m, ops), chi_spec)
-        return _apply_copies(chi, ops)
+        yw = jax.vmap(block)(ops.edge_src_b[m], ops.edge_dst_b[m])
+        return yw.transpose(2, 0, 1).reshape(v, n) > 0  # [V, n], block-major
 
-    return _sweep_fixpoint(sweep, _warm_init(ops, chi0), max_sweeps, chi_spec)
+    return _jacobi_packed_fixpoint(
+        propagate_blocks, ops, max_sweeps, chi_spec, chi0
+    )
 
 
 # --------------------------------------------------------------------- #
@@ -852,9 +1062,11 @@ def solve_compiled(
 ) -> tuple[np.ndarray, int]:
     """Solve a compiled SOI with the chosen engine; returns (chi, iters).
 
-    Engines: ``dense``, ``packed``, ``sparse`` (Gauss–Seidel),
-    ``jacobi_packed`` (sparse with one packed frontier broadcast per sweep),
-    ``partitioned`` (destination-partitioned edge blocks; ``n_blocks``
+    Engines: ``dense``, ``packed``, ``packed_fused`` (bit-packed chi end to
+    end through the fused ``bitmm_apply`` kernel), ``sparse``
+    (Gauss–Seidel), ``jacobi_packed`` (edge lists over a bit-packed chi
+    state, one packed frontier replicate per sweep), ``partitioned``
+    (destination-partitioned edge blocks over packed chi; ``n_blocks``
     shards, node axis auto-padded), ``worklist`` (numpy reference).
 
     ``chi0`` warm-starts any batched engine from a previous fixpoint
@@ -869,6 +1081,8 @@ def solve_compiled(
         chi, it = solve_dense(make_dense_operands(c, g), dtype=dtype, chi0=chi0)
     elif engine == "packed":
         chi, it = solve_packed(make_packed_operands(c, g), chi0=chi0)
+    elif engine == "packed_fused":
+        chi, it = solve_packed_fused(make_packed_operands(c, g), chi0=chi0)
     elif engine == "sparse":
         chi, it = solve_sparse(make_sparse_operands(c, g), chi0=chi0)
     elif engine == "jacobi_packed":

@@ -94,7 +94,8 @@ class GraphDB:
         incremental: bool = True,
     ):
         """``engine`` picks the fixpoint engine ("auto" = cost-based):
-        dense / packed / sparse / jacobi_packed / partitioned.  ``mesh`` is
+        dense / packed / packed_fused / sparse / jacobi_packed /
+        partitioned.  ``mesh`` is
         a ``jax.sharding.Mesh`` (see :func:`repro.distributed.ctx.node_mesh`)
         the partitioned engine shards chi's node axis over; with a mesh of
         >= 2 devices, engine="auto" selects "partitioned" once the graph

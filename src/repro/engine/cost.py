@@ -17,6 +17,12 @@ operators, W = devices in the mesh):
 * ``packed`` — the Pallas bitmm path: 32 bits per word cuts element count by
   32x, but on the CPU backend the kernel runs in interpret mode, which the
   model charges a large penalty (packed is an accelerator engine).
+* ``packed_fused`` — the end-to-end bit-packed engine (DESIGN.md Sect. 9):
+  same word count as ``packed`` at roughly half the per-word cost (the
+  unpack → gather → AND chain between product and update is fused away, so
+  chi never inflates 8x in HBM), and on CPU it lowers to the word-wise XLA
+  path instead of kernel emulation — far cheaper than interpreted
+  ``packed`` though still behind ``sparse`` on most CPU-sized graphs.
 * ``sparse`` — gather + segment_max message passing: ``V * E`` messages at
   scatter-regime cost, plus the per-operator AND-apply over ``V * n``.
   Always feasible on one device.  Under Gauss–Seidel every operator
@@ -44,12 +50,17 @@ import jax
 from repro.core.graph import Graph
 from repro.core.soi import CompiledSOI
 
-ENGINES = ("dense", "packed", "sparse", "jacobi_packed", "partitioned")
+ENGINES = (
+    "dense", "packed", "packed_fused", "sparse", "jacobi_packed",
+    "partitioned",
+)
 
 # model constants (relative cost per element)
 C_DENSE = 1.0 / 8.0  # matmul elements amortize on MXU/BLAS
 C_PACKED = 2.0  # per uint32 word, compiled Pallas
 C_PACKED_INTERPRET = 256.0  # per word under interpret mode (CPU backend)
+C_PACKED_FUSED = 1.0  # per word, fused kernel: no unpack/gather chain
+C_PACKED_FUSED_CPU = 24.0  # per word, word-wise XLA lowering (no kernel)
 PACKED_LAUNCH = 65536.0  # per-operator kernel launch overhead
 C_SPARSE = 4.0  # per edge message (gather + segment_max)
 C_APPLY = 0.5  # per chi element per operator (AND-apply)
@@ -107,6 +118,12 @@ def estimate_costs(
         float("inf")
         if packed_bytes > PACKED_MAX_BYTES
         else v * n * n_words * m * c_packed + m * PACKED_LAUNCH
+    )
+    c_fused = C_PACKED_FUSED_CPU if backend == "cpu" else C_PACKED_FUSED
+    costs["packed_fused"] = (
+        float("inf")
+        if packed_bytes > PACKED_MAX_BYTES
+        else v * n * n_words * m * c_fused + m * PACKED_LAUNCH
     )
     edge_work = v * e * C_SPARSE + v * n * m * C_APPLY
     # Gauss–Seidel re-gathers chi per operator: M chi-sized collectives/sweep

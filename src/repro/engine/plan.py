@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dualsim, soi as soi_mod
+from repro.core import bitops, dualsim, soi as soi_mod
 from repro.core.graph import Graph, GraphDelta
 
 from . import cost as cost_mod
@@ -50,9 +50,16 @@ def _shard_partitioned_operands(
         mesh, jax.sharding.PartitionSpec(mesh.axis_names, None)
     )
     put = lambda xs: tuple(jax.device_put(x, block) for x in xs)
+    # init_packed stays replicated: its word axis (n/32) need not divide the
+    # mesh (device_put rejects uneven sharding), it is read once at loop
+    # start, and the loop state constraint distributes chi from there
+    replicated = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec()
+    )
     return dataclasses.replace(
         ops,
         init=jax.device_put(ops.init, chi_spec),
+        init_packed=jax.device_put(ops.init_packed, replicated),
         edge_src_b=put(ops.edge_src_b),
         edge_dst_b=put(ops.edge_dst_b),
     )
@@ -164,6 +171,17 @@ class CompiledPlan:
             solver = functools.partial(
                 dualsim.solve_packed, interpret=(backend == "cpu")
             )
+        elif engine == "packed_fused":
+            self.operands = dualsim.make_packed_operands(self.csoi, db, adj_cache)
+            # fused Pallas kernel on accelerators; on CPU the word-wise XLA
+            # lowering (kernel emulation would cost ~9x — DESIGN.md Sect. 9).
+            # Resolved here, not via impl=None, because plans honor an
+            # Engine-level ``backend`` override rather than the process
+            # default the solver's auto-detection would consult.
+            solver = functools.partial(
+                dualsim.solve_packed_fused,
+                impl=("words" if backend == "cpu" else "kernel"),
+            )
         elif engine == "sparse":
             self.operands = dualsim.make_sparse_operands(self.csoi, db, adj_cache)
             solver = dualsim.solve_sparse
@@ -190,11 +208,16 @@ class CompiledPlan:
 
         self._adj_cache = adj_cache
         # incremental maintenance state (DESIGN.md Sect. 8): the last solved
-        # chi per constant tuple, and re-seeded warm starts staged by
-        # patch_graph for the next execution of the same constants
+        # chi per constant tuple (bit-packed, 8x smaller than bool), and
+        # re-seeded warm starts staged by patch_graph for the next
+        # execution of the same constants
         self._chi_memo: BoundedDict = BoundedDict(capacity=4)
         self._warm: dict = {}
         self.last_sweeps: int | None = None
+        # engines whose while_loop state is bit-packed take constants and
+        # warm starts as uint32 words; bool chi never touches the device
+        self._packed_chi = engine in ("packed_fused", "jacobi_packed",
+                                      "partitioned")
 
         self.metrics = PlanMetrics()
         scatter = jnp.asarray(self._scatter_ids)
@@ -202,21 +225,26 @@ class CompiledPlan:
 
         def _run(ops: dualsim.Operands, const_rows: jax.Array, chi0: jax.Array):
             # executes at trace time only: the counter observes retraces.
-            # chi0 is the warm-start upper bound; the cold path passes
-            # ops.init itself, making the AND below an identity — one trace
+            # chi0 is the warm-start upper bound; the cold path passes the
+            # init itself, making the AND below an identity — one trace
             # serves both regimes.
             self.metrics.traces += 1
-            init = ops.init
+            init = ops.init_packed if self._packed_chi else ops.init
             if const_rows.shape[0]:
                 if const_rows.shape[-1] != init.shape[-1]:
                     # partitioned layout: init is block-padded past n_nodes
+                    # (zero pad words/columns are dead either way)
                     const_rows = jnp.pad(
                         const_rows,
                         ((0, 0), (0, init.shape[-1] - const_rows.shape[-1])),
                     )
                 init = init.at[scatter].set(init[scatter] & const_rows)
-            init = jnp.logical_and(init, chi0)
-            chi, sweeps = solver(dataclasses.replace(ops, init=init))
+            init = init & chi0
+            if self._packed_chi:
+                ops = dataclasses.replace(ops, init_packed=init)
+            else:
+                ops = dataclasses.replace(ops, init=init)
+            chi, sweeps = solver(ops)
             return chi[:, :n_nodes], sweeps
 
         self._run = jax.jit(_run)
@@ -268,13 +296,21 @@ class CompiledPlan:
         start for exactly these constants, the solve resumes from it
         instead of the Eq.-13 init (same fixpoint, far fewer sweeps).
         """
-        rows = jnp.asarray(self.const_rows(bindings))
+        rows = self.const_rows(bindings)
+        if self._packed_chi:
+            # packed engines take everything as uint32 words: constants,
+            # init, warm starts — 8x less host->device traffic per request
+            rows = bitops.pack_np(rows)
+        rows = jnp.asarray(rows)
         key = tuple(bindings)
         warm = self._warm.pop(key, None)
+        cold_identity = (
+            self.operands.init_packed if self._packed_chi else self.operands.init
+        )
         if warm is None:
-            chi0 = self.operands.init  # cold: AND with init is an identity
+            chi0 = cold_identity  # cold: AND with init is an identity
         else:
-            width = self.operands.init.shape[-1]
+            width = cold_identity.shape[-1]
             if warm.shape[-1] != width:  # partitioned block padding
                 warm = np.pad(warm, ((0, 0), (0, width - warm.shape[-1])))
             chi0 = jnp.asarray(warm)
@@ -284,8 +320,10 @@ class CompiledPlan:
         chi, sweeps = np.asarray(chi), int(sweeps)
         self.last_sweeps = sweeps
         if self.incremental:
-            # bit-packed: 8x smaller than the bool chi it warm-starts
-            self._chi_memo[key] = np.packbits(chi, axis=-1)
+            # bit-packed: 8x smaller than the bool chi it warm-starts, and
+            # for the packed-chi engines it feeds straight back into the
+            # solver with no unpack round trip (DESIGN.md Sect. 9)
+            self._chi_memo[key] = bitops.pack_np(chi)
         return chi, sweeps
 
     def patch_graph(
@@ -335,12 +373,19 @@ class CompiledPlan:
             )
         grow = dualsim.destabilized_rows(self.csoi, delta.inserted_labels())
         self._warm = {}
-        for key, packed in self._chi_memo.items():
-            chi0 = np.unpackbits(
-                packed, axis=-1, count=self.n_nodes
-            ).astype(bool)
-            chi0[grow] = True
-            self._warm[key] = chi0
+        if self._packed_chi:
+            # stay packed: destabilized rows re-seed to the all-ones mask
+            # (trailing pad bits zero), the memo words go back verbatim
+            ones = bitops.ones_mask(self.n_nodes)
+            for key, packed in self._chi_memo.items():
+                chi0 = packed.copy()
+                chi0[grow] = ones
+                self._warm[key] = chi0
+        else:
+            for key, packed in self._chi_memo.items():
+                chi0 = bitops.unpack_np(packed, self.n_nodes)
+                chi0[grow] = True
+                self._warm[key] = chi0
         # superseded fixpoints are warm seeds now, not current results
         self._chi_memo.clear()
         self.metrics.patches += 1

@@ -45,6 +45,121 @@ def _bitmm_kernel(x_ref, a_ref, o_ref):
     o_ref[...] = jnp.bitwise_or(o_ref[...], acc)
 
 
+def _bitmm_apply_kernel(xc_ref, a_ref, f_ref, xe_ref, o_ref, chg_ref):
+    """Fused sweep step: packed product, AND-combine, changed accumulation.
+
+    Grid (J, I), I innermost.  ``o_ref`` doubles as the y accumulator: for
+    i < I-1 it holds the partial packed product; the last contraction step
+    turns it into the updated chi tile in place and ORs the changed words
+    into ``chg_ref`` — one revisited output tile, no scratch buffer.
+    """
+    j, i = pl.program_id(0), pl.program_id(1)
+    ni = pl.num_programs(1)
+
+    @pl.when((j == 0) & (i == 0))
+    def _init_changed():
+        chg_ref[...] = jnp.zeros_like(chg_ref)
+
+    @pl.when(i == 0)
+    def _init_acc():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xw = xc_ref[...]  # [V, BIW] packed chi words of the contraction block
+    a = a_ref[...]  # [1, BIW, 32, BJW] packed adjacency tile, word-split rows
+    # frontier bits of the block, extracted word-wise on the VPU (bit s of
+    # word w is contraction row 32*w + s — matching a's host-side reshape)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (xw[:, :, None] >> shifts) & jnp.uint32(1)  # [V, BIW, 32]
+    masked = jnp.where(
+        (bits != 0)[..., None], a, jnp.uint32(0)
+    )  # [V, BIW, 32, BJW]
+    acc = jax.lax.reduce(masked, jnp.uint32(0), jax.lax.bitwise_or, (1, 2))
+    o_ref[...] = jnp.bitwise_or(o_ref[...], acc)
+
+    @pl.when(i == ni - 1)
+    def _combine():
+        y = o_ref[...]  # [V, BJW] finished packed product chi ×b A
+        f = f_ref[...]  # [V, V] lhs-rhs inequality flags
+        # chi[l] &= AND_{r: f[l,r]} y[r]  ==  chi[l] &= ~OR_{r: f[l,r]} ~y[r]
+        viol = jnp.where(
+            (f != 0)[:, :, None], jnp.bitwise_not(y)[None, :, :], jnp.uint32(0)
+        )  # [V(lhs), V(rhs), BJW]
+        bad = jax.lax.reduce(viol, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+        old = xe_ref[...]  # [V, BJW] chi tile being updated
+        new = jnp.bitwise_and(old, jnp.bitwise_not(bad))
+        o_ref[...] = new
+        delta = jax.lax.reduce(
+            jnp.bitwise_xor(new, old), jnp.uint32(0), jax.lax.bitwise_or, (0, 1)
+        )
+        chg_ref[...] = jnp.bitwise_or(
+            chg_ref[...], jnp.full((1, 1), delta, jnp.uint32)
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_jw", "interpret")
+)
+def bitmm_apply_packed(
+    chi_packed: jax.Array,  # uint32 [V, nw] packed chi rows
+    a_packed: jax.Array,  # uint32 [n, nw] packed adjacency
+    lhs_flags: jax.Array,  # uint32 [V, V] 0/1; [l, r] set iff ineq chi[l] <= chi[r] xb A
+    *,
+    block_i: int = 256,
+    block_jw: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused operator application on bit-packed chi.
+
+    Computes ``y = chi ×b A`` and ``chi'[l] = chi[l] & AND_{r: F[l,r]} y[r]``
+    in a single Pallas grid; returns ``(chi', changed)`` with ``changed`` a
+    uint32 scalar that is nonzero iff any chi word moved.  Everything stays
+    packed: HBM traffic is 1 bit per node end-to-end, and the former
+    bitmm → unpack → gather → ``jnp.all`` → AND chain is one kernel launch.
+    """
+    assert block_i % 32 == 0, block_i
+    v, nw = chi_packed.shape
+    n, nw_a = a_packed.shape
+    assert nw_a == nw, (chi_packed.shape, a_packed.shape)
+    assert lhs_flags.shape == (v, v), (lhs_flags.shape, v)
+
+    vp = -(-v // 8) * 8
+    np_ = -(-n // block_i) * block_i
+    nwp = -(-nw // block_jw) * block_jw
+    biw = block_i // 32
+    # chi plays two roles: contraction input (its bits select A rows, so its
+    # word axis pads to np_/32) and elementwise input (tiles like the
+    # output, padding to nwp).  Zero padding is the OR/AND identity in both.
+    xc = jnp.zeros((vp, np_ // 32), jnp.uint32).at[:v, :nw].set(chi_packed)
+    xe = jnp.zeros((vp, nwp), jnp.uint32).at[:v, :nw].set(chi_packed)
+    a_p = jnp.zeros((np_, nwp), jnp.uint32).at[:n, :nw].set(a_packed)
+    # row 32*w + s of block b lands at [b, w, s, :]: the kernel's bit
+    # extraction indexes words, never reshapes inside the kernel
+    a4 = a_p.reshape(np_ // block_i, biw, 32, nwp)
+    f_p = jnp.zeros((vp, vp), jnp.uint32).at[:v, :v].set(lhs_flags)
+
+    grid = (nwp // block_jw, np_ // block_i)
+    chi_new, changed = pl.pallas_call(
+        _bitmm_apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((vp, biw), lambda j, i: (0, i)),
+            pl.BlockSpec((1, biw, 32, block_jw), lambda j, i: (i, 0, 0, j)),
+            pl.BlockSpec((vp, vp), lambda j, i: (0, 0)),
+            pl.BlockSpec((vp, block_jw), lambda j, i: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((vp, block_jw), lambda j, i: (0, j)),
+            pl.BlockSpec((1, 1), lambda j, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((vp, nwp), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(xc, a4, f_p, xe)
+    return chi_new[:v, :nw], changed[0, 0]
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_i", "block_jw", "interpret")
 )

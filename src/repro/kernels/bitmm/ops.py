@@ -1,9 +1,14 @@
-"""jit'd public wrappers for the bitmm kernel.
+"""jit'd public wrappers for the bitmm kernels.
 
 ``bitmm`` is the drop-in boolean product used by
 :func:`repro.core.dualsim.solve_packed`: boolean frontier in, boolean rows
-out, packed adjacency in between.  On CPU we run the Pallas kernel in
-interpret mode; on TPU the same call compiles to Mosaic.
+out, packed adjacency in between.  ``bitmm_apply`` is the fused sweep step
+of :func:`repro.core.dualsim.solve_packed_fused`: packed chi in, packed chi
+out, product + AND-combine + changed detection in one launch.
+
+``interpret=None`` (the default) auto-detects the backend: on CPU the
+Pallas kernel runs in interpret mode, on accelerators it compiles — direct
+callers no longer silently interpret on TPU or crash on CPU.
 """
 from __future__ import annotations
 
@@ -17,12 +22,19 @@ from . import kernel as _kernel
 from . import ref as _ref
 
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Backend auto-detection: interpret the kernel only off-accelerator."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "use_ref"))
 def bitmm(
     x: jax.Array,  # bool [V, n]
     a_packed: jax.Array,  # uint32 [n, nw]
     *,
-    interpret: bool = False,
+    interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
     """Returns bool [V, n_cols] where n_cols = n (square adjacency)."""
@@ -30,7 +42,9 @@ def bitmm(
     if use_ref:
         return _ref.bitmm_ref(x, a_packed, n)
     flags = x.astype(jnp.uint32)
-    out_packed = _kernel.bitmm_packed(flags, a_packed, interpret=interpret)
+    out_packed = _kernel.bitmm_packed(
+        flags, a_packed, interpret=_resolve_interpret(interpret)
+    )
     return bitops.unpack(out_packed, n)
 
 
@@ -40,9 +54,37 @@ def bitmm_packed(
     a_packed: jax.Array,  # uint32 [n, nw]
     n: int | None = None,
     *,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Fully packed variant: packed frontier in, packed result out."""
     nn = a_packed.shape[0]
     flags = bitops.unpack(x_packed, nn).astype(jnp.uint32)
-    return _kernel.bitmm_packed(flags, a_packed, interpret=interpret)
+    return _kernel.bitmm_packed(
+        flags, a_packed, interpret=_resolve_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def bitmm_apply(
+    chi_packed: jax.Array,  # uint32 [V, nw] packed chi
+    a_packed: jax.Array,  # uint32 [n, nw] packed adjacency of one operator
+    lhs_flags: jax.Array,  # uint32 [V, V] inequality flags for that operator
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused operator application on packed chi (see ``bitmm_apply_packed``).
+
+    Returns ``(chi', changed)``: the AND-updated packed chi and a uint32
+    scalar, nonzero iff any word moved.  ``use_ref`` swaps in the pure-jnp
+    oracle (:func:`..ref.bitmm_apply_ref`) — the same fixpoint step, useful
+    both for parity tests and as the XLA lowering where no accelerator is
+    present.
+    """
+    if use_ref:
+        n = a_packed.shape[0]
+        return _ref.bitmm_apply_ref(chi_packed, a_packed, lhs_flags, n)
+    return _kernel.bitmm_apply_packed(
+        chi_packed, a_packed, lhs_flags,
+        interpret=_resolve_interpret(interpret),
+    )

@@ -29,6 +29,7 @@ import numpy as np
 from repro.data import synth
 from repro.db import GraphDB
 from repro.distributed import ctx as dctx
+from repro.engine.cost import ENGINES
 
 QUERY = "{{ ?d subOrganizationOf {uni} . ?s memberOf ?d }}"
 
@@ -40,8 +41,7 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-delay-ms", type=float, default=50.0)
     ap.add_argument("--engine", default="auto",
-                    choices=["auto", "sparse", "dense", "packed",
-                             "jacobi_packed", "partitioned"],
+                    choices=["auto", *ENGINES],
                     help="fixpoint engine; 'auto' = cost-based selection")
     ap.add_argument("--devices", type=int, default=0,
                     help="shard over a mesh of this many (simulated host) "

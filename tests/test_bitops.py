@@ -42,3 +42,83 @@ def test_leq_matches_set_inclusion(n, seed):
 def test_ones_mask_trailing_bits():
     m = bitops.ones_mask(70)
     assert np.asarray(bitops.popcount(jnp.asarray(m))) == 70
+
+
+# --------------------------------------------------------------------- #
+# ISSUE 5: trailing-pad-bit hygiene at n % 32 != 0 — the exact edge the
+# packed-chi while_loop's word-level convergence and leq checks depend on
+# --------------------------------------------------------------------- #
+def _unaligned(draw_n):
+    """Remap any int onto a width with n % 32 != 0."""
+    n = draw_n % 200 + 1
+    return n + 1 if n % 32 == 0 else n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 10_000), st.integers(0, 2**31 - 1))
+def test_pack_np_matches_device_pack_and_roundtrips(raw_n, seed):
+    n = _unaligned(raw_n)
+    rng = np.random.default_rng(seed)
+    bits = rng.random((4, n)) < 0.4
+    host = bitops.pack_np(bits)
+    dev = np.asarray(bitops.pack(jnp.asarray(bits)))
+    assert host.dtype == np.uint32 and np.array_equal(host, dev)
+    assert np.array_equal(bitops.unpack_np(host, n), bits)
+    assert np.array_equal(np.asarray(bitops.unpack(jnp.asarray(host), n)), bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 10_000), st.integers(0, 2**31 - 1))
+def test_trailing_pad_bits_are_always_zero(raw_n, seed):
+    n = _unaligned(raw_n)
+    rng = np.random.default_rng(seed)
+    bits = rng.random((3, n)) < 0.5
+    for packed in (bitops.pack_np(bits),
+                   np.asarray(bitops.pack(jnp.asarray(bits)))):
+        rem = n % bitops.WORD
+        if rem:
+            pad_mask = np.uint32(0xFFFFFFFF) << np.uint32(rem)
+            assert not (packed[..., -1] & pad_mask).any()
+        # popcount therefore counts logical bits only
+        assert np.array_equal(
+            np.asarray(bitops.popcount(jnp.asarray(packed))), bits.sum(-1)
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 10_000), st.integers(0, 2**31 - 1))
+def test_pad_bits_never_leak_into_convergence_or_leq(raw_n, seed):
+    """Adversarial pad bits in one operand must not flip any_set/leq/
+    convergence verdicts about the logical n bits."""
+    n = _unaligned(raw_n)
+    rng = np.random.default_rng(seed)
+    a = rng.random(n) < 0.3
+    b = a | (rng.random(n) < 0.3)
+    pa, pb = bitops.pack_np(a), bitops.pack_np(b)
+    # a <= b as sets, with clean pads
+    assert bool(bitops.leq(jnp.asarray(pa), jnp.asarray(pb)))
+    # dirty the pad bits of b only: a <= b must still hold, and masking
+    # with ones_mask restores the canonical words exactly
+    rem = n % bitops.WORD
+    dirty = pb.copy()
+    dirty[-1] |= np.uint32(0xFFFFFFFF) << np.uint32(rem)
+    assert bool(bitops.leq(jnp.asarray(pa), jnp.asarray(dirty)))
+    masked = dirty & bitops.ones_mask(n)
+    assert np.array_equal(masked, pb)
+    # word-level equality (the packed convergence test) sees canonical
+    # operands as equal iff their logical bits are equal
+    assert np.array_equal(bitops.pack_np(a), bitops.pack_np(a.copy()))
+    if (b & ~a).any():
+        assert (bitops.pack_np(b) != bitops.pack_np(a)).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 10_000), st.integers(0, 2**31 - 1))
+def test_ones_mask_is_and_identity_on_packed(raw_n, seed):
+    n = _unaligned(raw_n)
+    rng = np.random.default_rng(seed)
+    bits = rng.random((2, n)) < 0.5
+    packed = bitops.pack_np(bits)
+    assert np.array_equal(packed & bitops.ones_mask(n), packed)
+    m = bitops.ones_mask(n)
+    assert np.asarray(bitops.popcount(jnp.asarray(m))) == n

@@ -1,5 +1,6 @@
 """Dual-simulation engine correctness: all engines vs the Ma et al. oracle
 (paper Def. 2 / Prop. 1/2), plus the paper's worked examples."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from tests._hyp import given, settings, st
@@ -10,7 +11,7 @@ from repro.core.hhk import dual_simulation_hhk
 from repro.core.ma_baseline import dual_simulation_ma
 from repro.data import synth
 
-ENGINES = ["dense", "packed", "sparse", "worklist"]
+ENGINES = ["dense", "packed", "packed_fused", "sparse", "worklist"]
 
 
 def _random_instance(seed):
@@ -186,7 +187,10 @@ def test_partitioned_operands_adj_cache_shared():
 # cross-engine equivalence: all five batched engines vs the paper's
 # sequential worklist, over random BGP / AND / OPTIONAL queries
 # --------------------------------------------------------------------- #
-ALL_BATCHED = ("dense", "packed", "sparse", "jacobi_packed", "partitioned")
+ALL_BATCHED = (
+    "dense", "packed", "packed_fused", "sparse", "jacobi_packed",
+    "partitioned",
+)
 
 
 def _random_query(rng, n_labels: int, node_names):
@@ -232,8 +236,9 @@ def _check_cross_engine(seed: int) -> None:
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10_000))
 def test_cross_engine_equivalence_property(seed):
-    """dense / packed / sparse(gs) / sparse(jacobi_packed) / partitioned all
-    reach solve_worklist's fixpoint on random graph x query instances."""
+    """dense / packed / packed_fused / sparse(gs) / sparse(jacobi_packed) /
+    partitioned all reach solve_worklist's fixpoint on random graph x query
+    instances."""
     _check_cross_engine(seed)
 
 
@@ -241,3 +246,122 @@ def test_cross_engine_equivalence_property(seed):
 def test_cross_engine_equivalence_fixed_seeds(seed):
     """Deterministic slice of the property above (runs without hypothesis)."""
     _check_cross_engine(seed)
+
+
+def test_packed_fused_impls_match():
+    """Both lowerings of the fused engine (Pallas kernel in interpret mode,
+    word-wise XLA) compute the worklist fixpoint in the same sweep count."""
+    db = synth.random_graph(45, 3, 150, seed=13)
+    pat = synth.random_pattern(3, 3, 4, seed=13)
+    c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
+    ref, _ = dualsim.solve_worklist(c, db)
+    ops = dualsim.make_packed_operands(c, db)
+    chi_k, it_k = dualsim.solve_packed_fused(ops, impl="interpret")
+    chi_w, it_w = dualsim.solve_packed_fused(ops, impl="words")
+    assert np.array_equal(np.asarray(chi_k), ref)
+    assert np.array_equal(np.asarray(chi_w), ref)
+    assert int(it_k) == int(it_w)
+
+
+# --------------------------------------------------------------------- #
+# packed-chi invariants: the while_loop never packs or unpacks (ISSUE 5)
+# --------------------------------------------------------------------- #
+def _collect_while_eqns(jaxpr, out):
+    """All `while` equations reachable without entering pallas_call."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        if eqn.primitive.name == "while":
+            out.append(eqn)
+        for param in eqn.params.values():
+            for sub in _sub_jaxprs(param):
+                _collect_while_eqns(sub, out)
+    return out
+
+
+def _sub_jaxprs(param):
+    import jax.core as jcore
+
+    if isinstance(param, jcore.ClosedJaxpr):
+        yield param.jaxpr
+    elif isinstance(param, jcore.Jaxpr):
+        yield param
+    elif isinstance(param, (tuple, list)):
+        for p in param:
+            yield from _sub_jaxprs(p)
+
+
+def _primitive_names(jaxpr, skip=("pallas_call",)):
+    names = set()
+    for eqn in jaxpr.eqns:
+        names.add(eqn.primitive.name)
+        if eqn.primitive.name in skip:
+            continue
+        for param in eqn.params.values():
+            for sub in _sub_jaxprs(param):
+                names |= _primitive_names(sub, skip)
+    return names
+
+
+def test_packed_fused_while_body_has_no_pack_or_unpack():
+    """ISSUE 5 acceptance, asserted for the KERNEL lowering (what
+    accelerators serve): chi is uint32 words through the entire
+    lax.while_loop — the body jaxpr contains none of the primitives pack
+    (shift_left + reduce_sum) or unpack (shift_right + 32-lane broadcast)
+    lower to, and the loop carry holds no boolean chi.  The CPU ``words``
+    lowering is exempt by construction: it extracts frontier bits with jnp
+    shifts inside the body (DESIGN.md Sect. 9, "Lowerings")."""
+    import jax
+
+    db = synth.random_graph(70, 2, 200, seed=3)  # 70 % 32 != 0
+    pat = synth.random_pattern(3, 2, 3, seed=3)
+    c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
+    ops = dualsim.make_packed_operands(c, db)
+    jaxpr = jax.make_jaxpr(
+        lambda o: dualsim.solve_packed_fused(o, impl="interpret")
+    )(ops)
+    whiles = _collect_while_eqns(jaxpr.jaxpr, [])
+    assert whiles, "fused solver lost its while_loop"
+    forbidden = {
+        "reduce_sum",  # the sum step of bitops.pack
+        "shift_left",  # pack's per-bit shifts
+        "shift_right_logical",  # unpack's per-bit shifts
+        "shift_right_arithmetic",
+    }
+    for eqn in whiles:
+        body = eqn.params["body_jaxpr"].jaxpr
+        used = _primitive_names(body)
+        assert not (used & forbidden), sorted(used & forbidden)
+        # the carried chi state is packed words, never a bool [V, n] plane
+        carried = [v.aval for v in body.outvars]
+        assert any(
+            a.dtype == jnp.uint32 and a.ndim == 2 for a in carried
+        ), carried
+        assert not any(
+            a.dtype == jnp.bool_ and a.ndim >= 2 for a in carried
+        ), carried
+
+
+def test_packed_state_engines_carry_words_not_bools():
+    """jacobi_packed / partitioned also iterate a packed uint32 chi state
+    (their per-sweep y pack is data freshly produced by the segment reduce;
+    chi itself never round-trips)."""
+    import jax
+
+    db = synth.random_graph(48, 2, 120, seed=4)
+    pat = synth.random_pattern(3, 2, 3, seed=4)
+    c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
+    cases = [
+        (dualsim.make_sparse_operands(c, db),
+         lambda o: dualsim.solve_sparse(o, mode="jacobi_packed")),
+        (dualsim.make_partitioned_operands(c, db, n_blocks=4),
+         dualsim.solve_partitioned),
+    ]
+    for ops, solve in cases:
+        jaxpr = jax.make_jaxpr(solve)(ops)
+        whiles = _collect_while_eqns(jaxpr.jaxpr, [])
+        assert whiles
+        for eqn in whiles:
+            carried = [v.aval for v in eqn.params["body_jaxpr"].jaxpr.outvars]
+            assert any(a.dtype == jnp.uint32 and a.ndim == 2 for a in carried)
+            assert not any(a.dtype == jnp.bool_ and a.ndim >= 2 for a in carried)

@@ -222,6 +222,29 @@ def test_warm_rebind_no_recompile_no_retrace(lubm):
     assert plan.metrics.executions == 4
 
 
+def test_packed_fused_warm_rebind_no_recompile_no_retrace(lubm):
+    """The end-to-end packed engine serves constant rebinds on one trace:
+    constants scatter into the packed init as uint32 words, so the warm
+    path's avals never change shape or dtype (ISSUE 5 acceptance)."""
+    eng = Engine(lubm, engine="packed_fused")
+    r0 = eng.execute("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }")
+    assert not r0.cache_hit and r0.engine == "packed_fused"
+    plan, _ = eng.plan_for(
+        canonicalize(sparql.parse("{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }"))
+    )
+    assert plan.metrics.traces == 1
+    for uni in ["Univ1", "Univ2", "Univ0"]:
+        r = eng.execute(f"{{ ?q subOrganizationOf {uni} . ?m memberOf ?q }}")
+        assert r.cache_hit and r.engine == "packed_fused"
+        assert np.array_equal(
+            r.survivors, _direct_mask(
+                sparql.parse(f"{{ ?q subOrganizationOf {uni} . ?m memberOf ?q }}"),
+                lubm,
+            )
+        )
+    assert plan.metrics.traces == 1  # zero retraces across rebinds
+
+
 def test_adjacency_shared_across_plans(lubm):
     # adjacency depends only on (engine, mats, graph): plans for different
     # batch buckets of one template must share the device arrays

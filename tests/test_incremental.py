@@ -15,7 +15,10 @@ from repro.engine.cost import resume_decision
 
 from tests._hyp import given, settings, st
 
-ALL_BATCHED = ("dense", "packed", "sparse", "jacobi_packed", "partitioned")
+ALL_BATCHED = (
+    "dense", "packed", "packed_fused", "sparse", "jacobi_packed",
+    "partitioned",
+)
 
 MEMBERS_OF = "{{ ?d subOrganizationOf {uni} . ?s memberOf ?d }}"
 
@@ -235,9 +238,15 @@ def test_shape_stable_mutation_resumes_through_serving(engine):
     assert np.array_equal(r2.survivor_mask, _direct_mask(sparql.parse(q),
                                                          db.graph))
     # the patched plan kept its operand shapes, so BOTH resumes re-ran the
-    # existing trace — the jitted fixpoint was never retraced
+    # existing trace — the jitted fixpoint was never retraced.  For the
+    # packed-chi engines this covers the ISSUE 5 acceptance: a packed
+    # _chi_memo entry resumed as a packed warm start causes zero retraces
+    # (the uint32 [V, nw] warm aval matches the cold init_packed aval).
     assert plan.metrics.traces == traces0
     assert plan.metrics.patches == 2 and plan.metrics.warm_resumes == 2
+    if engine in ("packed_fused", "jacobi_packed", "partitioned"):
+        memo = list(plan._chi_memo.items())
+        assert memo and all(v.dtype == np.uint32 for _, v in memo)
 
 
 def test_dictionary_change_is_cold_never_resumed():

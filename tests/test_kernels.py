@@ -71,6 +71,94 @@ def test_bitmm_empty_frontier():
 
 
 # --------------------------------------------------------------------- #
+# bitmm_apply: the fused packed sweep step (ISSUE 5)
+# --------------------------------------------------------------------- #
+def _fused_case(seed, n, v, density=0.1):
+    rng = np.random.default_rng(seed)
+    a = rng.random((n, n)) < density
+    chi = rng.random((v, n)) < 0.6
+    flags = (rng.random((v, v)) < 0.5).astype(np.uint32)
+    return (
+        jnp.asarray(bitops.pack_np(chi)),
+        jnp.asarray(bitops.pack_np(a)),
+        jnp.asarray(flags),
+        chi, a, flags,
+    )
+
+
+def _fused_truth(chi, a, flags):
+    v, n = chi.shape
+    y = np.zeros((v, n), bool)
+    for q in range(v):
+        if chi[q].any():
+            y[q] = a[chi[q]].any(axis=0)
+    new = chi.copy()
+    for l in range(v):
+        for r in range(v):
+            if flags[l, r]:
+                new[l] &= y[r]
+    return new
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 100, 257, 300, 520])
+@pytest.mark.parametrize("v", [1, 5, 9])
+def test_bitmm_apply_shape_sweep(n, v):
+    cp, ap, fj, chi, a, flags = _fused_case(n * 100 + v, n, v)
+    out_k, ch_k = kmod.bitmm_apply_packed(cp, ap, fj, interpret=True)
+    out_r, ch_r = kref.bitmm_apply_ref(cp, ap, fj, n)
+    out_w, ch_w = kref.bitmm_apply_words(cp, ap, fj)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_w))
+    truth = _fused_truth(chi, a, flags)
+    np.testing.assert_array_equal(
+        bitops.unpack_np(np.asarray(out_k), n), truth
+    )
+    # the changed flag agrees across kernel / oracle / word lowering, and
+    # with the boolean ground truth
+    moved = bool((truth != chi).any())
+    assert (int(ch_k) != 0) == (int(ch_r) != 0) == (int(ch_w) != 0) == moved
+    # trailing pad bits of the last word never turn on
+    if n % 32:
+        mask = np.uint32(0xFFFFFFFF) << np.uint32(n % 32)
+        assert not (np.asarray(out_k)[:, -1] & mask).any()
+
+
+@pytest.mark.parametrize("blocks", [(64, 128), (256, 128), (128, 64)])
+def test_bitmm_apply_block_shapes(blocks):
+    bi, bjw = blocks
+    cp, ap, fj, chi, a, flags = _fused_case(9, 520, 3, density=0.05)
+    out, _ = kmod.bitmm_apply_packed(
+        cp, ap, fj, block_i=bi, block_jw=bjw, interpret=True
+    )
+    exp, _ = kref.bitmm_apply_ref(cp, ap, fj, 520)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_bitmm_apply_fixpoint_changed_goes_quiet():
+    """Iterating the fused step must report changed=0 exactly when chi
+    stops moving — the packed while_loop's termination signal."""
+    cp, ap, fj, *_ = _fused_case(2, 130, 4, density=0.2)
+    for _ in range(20):
+        new, ch = kops.bitmm_apply(cp, ap, fj, interpret=True)
+        if not int(ch):
+            assert np.array_equal(np.asarray(new), np.asarray(cp))
+            break
+        assert not np.array_equal(np.asarray(new), np.asarray(cp))
+        cp = new
+    else:
+        raise AssertionError("fused step never converged")
+
+
+def test_bitmm_apply_no_flags_is_identity():
+    """An operator with no inequalities leaves chi and changed untouched."""
+    cp, ap, _, chi, *_ = _fused_case(7, 100, 3)
+    fz = jnp.zeros((3, 3), jnp.uint32)
+    out, ch = kops.bitmm_apply(cp, ap, fz, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(cp))
+    assert int(ch) == 0
+
+
+# --------------------------------------------------------------------- #
 # segsum kernel (windowed one-hot-matmul segment sum)
 # --------------------------------------------------------------------- #
 from repro.kernels.segsum import ops as sops
