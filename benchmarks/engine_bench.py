@@ -16,7 +16,12 @@ contract of benchmarks/run.py) and written to results/bench/engine.json:
   plan cache: serving latency is the fixpoint, not compilation.
 * ``throughput`` — requests/second through deadline-batched sessions at
   several bucket caps over the LUBM-like "same template, many constants"
-  workload.
+  workload.  **Closed-loop**: the driver waits for each wave before
+  offering the next, so offered load can never exceed service rate — this
+  is the engine's best case, NOT a serving-capacity claim.  The open-loop
+  (Poisson-arrival) capacity curve with p50/p99 vs offered load and shed
+  rates lives in ``benchmarks/serve_bench.py`` / ``BENCH_serve.json``; the
+  two headlines must not be conflated.
 * ``invalidation`` — latency of the first query after an insert (plan
   rebuild) vs a warm query, the price of a version bump.
 * ``partitioned`` (``--engine partitioned``) — the full section set runs
@@ -110,7 +115,11 @@ def cold_warm(graph, *, engine: str = "auto", warm_iters: int = 20,
 
 def throughput(graph, *, engine: str = "auto", batch_sizes=(1, 4, 8, 16),
                n_requests: int = 64, mesh=None) -> list[dict]:
-    """Requests/second through deadline-batched sessions per bucket cap."""
+    """Closed-loop requests/second through sessions per bucket cap.
+
+    Lock-step submission: a best-case engine number, not serving capacity
+    — see ``benchmarks/serve_bench.py`` for the open-loop curve.
+    """
     rows = []
     for batch in batch_sizes:
         db = GraphDB(graph, engine=engine, mesh=mesh)
@@ -433,6 +442,8 @@ def main() -> None:
     for r in rows[1:-1]:
         print(f"engine/{r['bench']},{r['t_total']*1e6:.1f},"
               f"req_per_s={r['req_per_s']:.1f}")
+    print("# throughput req/s above is closed-loop (lock-step submission);"
+          " open-loop capacity + shed curve: benchmarks/serve_bench.py")
     inv = rows[-1]
     print(f"engine/invalidation,{inv['t_rebuild']*1e6:.1f},"
           f"rebuild_over_warm={inv['rebuild_over_warm']:.1f}x")
@@ -452,6 +463,9 @@ def main() -> None:
         "engine": args.engine,
         "tiny": bool(args.tiny),
         "n_devices": max(args.devices, 1),
+        # closed-loop: lock-step offered load (engine best case).  The
+        # open-loop capacity trajectory is BENCH_serve.json.
+        "loop": "closed",
         "req_per_s_best": max(r["req_per_s"] for r in rows[1:-1]),
         "t_cold": cw["t_cold"],
         "t_warm": cw["t_warm"],

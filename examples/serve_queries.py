@@ -1,6 +1,12 @@
 """`repro.db` public-API tour: GraphDB, fluent builder, sessions, lazy
 result sets, and versioned plan invalidation (DESIGN.md Sect. 6).
 
+Throughput printed here is *closed-loop* (the driver waits for each batch
+before submitting more) — an engine number, not a serving-capacity claim.
+For the admission-controlled async front end and the open-loop saturation
+benchmark, see ``examples/serve_async.py`` and
+``benchmarks/serve_bench.py``.
+
     PYTHONPATH=src python examples/serve_queries.py
 """
 import os

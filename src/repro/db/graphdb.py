@@ -390,5 +390,14 @@ class GraphDB:
 
     def metrics(self) -> EngineMetrics:
         """Serving counters: cache hits/misses, invalidation classes
-        (cold vs resumable vs resumed), microbatches, per-stage seconds."""
-        return self._engine.metrics()
+        (cold vs resumable vs resumed), microbatches, per-stage seconds.
+
+        The copy is a single lock-protected snapshot
+        (:meth:`repro.engine.engine.Engine.stats`), safe to read from any
+        thread while sessions and the serving loop are in flight.
+        """
+        return self._engine.stats()
+
+    def stats(self) -> EngineMetrics:
+        """Alias of :meth:`metrics` (the engine-level name)."""
+        return self._engine.stats()

@@ -17,14 +17,24 @@ microbatched flush when the *admission policy* fires:
 * **explicit** — ``flush()``, ``future.result()`` on an unresolved future,
   or leaving the ``with`` block.
 
-The API is synchronous-cooperative: deadlines are checked at submit and
-result boundaries, not by a background thread, so behaviour is fully
-deterministic for tests and single-threaded servers.  All sessions of one
-:class:`~repro.db.graphdb.GraphDB` share its engine, so they share one warm
-plan cache; the database lock serializes flushes from concurrent threads.
+By default the API is synchronous-cooperative: deadlines are checked at
+submit and result boundaries, so behaviour is fully deterministic for
+tests and single-threaded servers.  With ``auto_flush=True`` a background
+flusher thread makes ``max_delay_ms`` a *real* timer: the deadline fires
+even if no further submit or result call ever arrives (the serving-loop
+regime, DESIGN.md Sect. 10).  Session state is lock-protected either way,
+so submits and flushes may come from concurrent threads.  All sessions of
+one :class:`~repro.db.graphdb.GraphDB` share its engine, so they share one
+warm plan cache; the database lock serializes flushes from concurrent
+threads.
+
+A flush isolates failures per request: if a batched execution raises, the
+batch re-runs request-by-request and only the offending request's future
+carries the exception — sibling futures still resolve with their results.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 from repro.core.sparql import Query
@@ -36,20 +46,27 @@ from .results import ResultSet
 class ResultFuture:
     """Handle for one submitted request; resolves when its batch flushes."""
 
-    __slots__ = ("_session", "_result")
+    __slots__ = ("_session", "_result", "_error")
 
     def __init__(self, session: "Session"):
         self._session = session
         self._result: ResultSet | None = None
+        self._error: BaseException | None = None
 
     def done(self) -> bool:
         """True once the request's batch has flushed and resolved it."""
-        return self._result is not None
+        return self._result is not None or self._error is not None
 
     def result(self) -> ResultSet:
-        """The request's :class:`ResultSet`, flushing the session if needed."""
-        if self._result is None:
+        """The request's :class:`ResultSet`, flushing the session if needed.
+
+        Raises the request's *own* execution exception if it failed —
+        sibling requests of the same flush are unaffected.
+        """
+        if not self.done():
             self._session.flush()
+        if self._error is not None:
+            raise self._error
         if self._result is None:
             # only reachable when an exception tore down the session's
             # `with` block and dropped its pending work unresolved
@@ -62,6 +79,54 @@ class ResultFuture:
     def _resolve(self, rs: ResultSet) -> None:
         self._result = rs
 
+    def _reject(self, exc: BaseException) -> None:
+        self._error = exc
+
+
+class _BackgroundFlusher(threading.Thread):
+    """Daemon timer that fires a session's ``max_delay_ms`` for real.
+
+    Sleeps on a condition variable until the session's armed deadline (or
+    until notified of a new, earlier one); past the deadline it calls
+    ``flush()``, which resolves every pending future.  Execution errors
+    cannot escape the flush (per-request isolation), so the thread only
+    dies on shutdown.
+    """
+
+    def __init__(self, session: "Session"):
+        super().__init__(name="session-flusher", daemon=True)
+        self._session = session
+        self.cv = threading.Condition()
+        self._stop = False
+
+    def run(self) -> None:
+        while True:
+            with self.cv:
+                if self._stop:
+                    return
+                deadline = self._session._deadline
+                wait = (
+                    None if deadline is None
+                    else deadline - time.monotonic()
+                )
+                if wait is None or wait > 0:
+                    self.cv.wait(timeout=wait)
+                    continue
+            # deadline passed: flush outside the cv (flush takes the
+            # session lock; submit holds it while notifying)
+            self._session.flush()
+
+    def stop(self) -> None:
+        """Unblock and terminate the timer thread."""
+        with self.cv:
+            self._stop = True
+            self.cv.notify()
+
+    def poke(self) -> None:
+        """Re-examine the (re)armed deadline."""
+        with self.cv:
+            self.cv.notify()
+
 
 class Session:
     """Submit/flush request surface over one :class:`GraphDB`."""
@@ -72,6 +137,7 @@ class Session:
         *,
         max_delay_ms: float = 5.0,
         max_pending: int | None = None,
+        auto_flush: bool = False,
     ):
         if max_delay_ms < 0:
             raise ValueError("max_delay_ms must be >= 0")
@@ -95,6 +161,10 @@ class Session:
         self._closed = False
         self.submitted = 0
         self.flushes = 0
+        self._lock = threading.RLock()
+        self._flusher = _BackgroundFlusher(self) if auto_flush else None
+        if self._flusher is not None:
+            self._flusher.start()
 
     # ------------------------------------------------------------------ #
     @property
@@ -109,54 +179,79 @@ class Session:
         :class:`~repro.db.builder.Q` builder.  Parsing happens here so
         syntax errors surface at the submit site, not inside a later flush.
         """
-        if self._closed:
-            raise RuntimeError("session is closed")
-        # prepare (parse + union_split + canonicalize) exactly once: the
-        # admission counter needs the template key here, and the flush hands
-        # the prepared pair straight to Engine.execute_prepared
-        q, inst = self._engine.prepare(self._db._coerce(query))
-        fut = ResultFuture(self)
-        self._pending.append((fut, (q, inst)))
-        self.submitted += 1
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("session is closed")
+            # prepare (parse + union_split + canonicalize) exactly once: the
+            # admission counter needs the template key here, and the flush
+            # hands the prepared pair straight to Engine.execute_prepared
+            q, inst = self._engine.prepare(self._db._coerce(query))
+            fut = ResultFuture(self)
+            self._pending.append((fut, (q, inst)))
+            self.submitted += 1
 
-        # admission policy --------------------------------------------- #
-        now = time.monotonic()
-        if self._deadline is None:
-            self._deadline = now + self.max_delay_ms / 1e3
-        if inst is not None:
-            # same template key => same microbatch; unique constant tuples
-            # count toward its cap (duplicates ride an existing slot)
-            seen = self._group_consts.setdefault(inst.template.key, set())
-            seen.add(inst.constants)
-            if len(seen) >= self.max_pending:
+            # admission policy ------------------------------------------ #
+            now = time.monotonic()
+            if self._deadline is None:
+                self._deadline = now + self.max_delay_ms / 1e3
+                if self._flusher is not None:
+                    self._flusher.poke()  # a fresh deadline was armed
+            if inst is not None:
+                # same template key => same microbatch; unique constant
+                # tuples count toward its cap (duplicates ride a slot)
+                seen = self._group_consts.setdefault(inst.template.key, set())
+                seen.add(inst.constants)
+                if len(seen) >= self.max_pending:
+                    self.flush()
+                    return fut
+            if now >= self._deadline:
                 self.flush()
-                return fut
-        if now >= self._deadline:
-            self.flush()
-        return fut
+            return fut
 
     def flush(self) -> int:
         """Release all pending requests as one microbatched engine call.
 
         Resolves every pending future; returns how many were resolved.
+        Failures are isolated per request: if the batched execution
+        raises, the batch re-runs one request at a time so only the
+        offending request's future is rejected with the exception, and its
+        siblings still resolve with results (regression: a poisoned
+        request used to leave the whole flush unresolved).
         """
-        if not self._pending:
+        with self._lock:
+            if not self._pending:
+                self._deadline = None
+                return 0
+            pending, self._pending = self._pending, []
+            self._group_consts.clear()
             self._deadline = None
-            return 0
-        pending, self._pending = self._pending, []
-        self._group_consts.clear()
-        self._deadline = None
-        results = self._db._execute_prepared([prep for _, prep in pending])
-        for (fut, _), rs in zip(pending, results):
-            fut._resolve(rs)
-        self.flushes += 1
-        return len(pending)
+            try:
+                results = self._db._execute_prepared(
+                    [prep for _, prep in pending]
+                )
+            except Exception:
+                # isolate the poisoned request: siblings get their results,
+                # the offender's future carries its own exception
+                for fut, prep in pending:
+                    try:
+                        fut._resolve(self._db._execute_prepared([prep])[0])
+                    except Exception as exc:
+                        fut._reject(exc)
+            else:
+                for (fut, _), rs in zip(pending, results):
+                    fut._resolve(rs)
+            self.flushes += 1
+            return len(pending)
 
     def close(self) -> None:
         """Flush outstanding work and reject further submits."""
-        if not self._closed:
+        with self._lock:
+            if self._closed:
+                return
             self.flush()
             self._closed = True
+        if self._flusher is not None:
+            self._flusher.stop()
 
     # ------------------------------------------------------------------ #
     def __enter__(self) -> "Session":
@@ -168,10 +263,13 @@ class Session:
         else:
             # an exception unwound the block: drop pending work unresolved
             # rather than masking the error with a flush that may also fail
-            self._pending.clear()
-            self._group_consts.clear()
-            self._deadline = None
-            self._closed = True
+            with self._lock:
+                self._pending.clear()
+                self._group_consts.clear()
+                self._deadline = None
+                self._closed = True
+            if self._flusher is not None:
+                self._flusher.stop()
 
     def __repr__(self) -> str:
         return (

@@ -141,6 +141,39 @@ def estimate_costs(
     return costs
 
 
+def admission_estimate(g: Graph, q) -> float:
+    """Admission-control price of a parsed query (DESIGN.md Sect. 10.2).
+
+    The serving loop must price a request *before* compiling anything —
+    admission is the cheap path — so this estimates the always-feasible
+    sparse engine's solve cost from the query text alone plus the graph's
+    label histogram: ``DEFAULT_SWEEPS * (V*E*C_SPARSE + V*n*M*C_APPLY)``
+    with V = distinct variables, M = 2x distinct labels (each label may
+    induce a forward and a backward operator in the SOI), and E the total
+    edges under the query's labels.  Labels absent from the graph
+    contribute no edges (such queries prune to empty almost immediately,
+    which the low price reflects).  Deliberately an *envelope*, not the
+    per-engine model: all the gate needs is a monotone handle on "how much
+    worse than the median template is this request".
+    """
+    from repro.core import sparql
+
+    def walk(node):
+        if isinstance(node, sparql.BGP):
+            return list(node.triples)
+        return walk(node.left) + walk(node.right)
+
+    triples = walk(q)
+    v = len(sparql.vars_of(q))
+    labels = {t.p for t in triples}
+    m = 2 * len(labels)
+    hist = g.label_histogram()
+    label_index = g.label_index() if g.label_names is not None else {}
+    e = sum(int(hist[label_index[name]])
+            for name in labels if name in label_index)
+    return DEFAULT_SWEEPS * (v * e * C_SPARSE + v * g.n_nodes * m * C_APPLY)
+
+
 # resume-vs-cold model constants (DESIGN.md Sect. 8.3).  A cold rebuild
 # pays SOI build + compile + operand upload + a fresh jit trace — the trace
 # dominates by orders of magnitude on the serving path (the PR-1 cold/warm

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from typing import Sequence
 
@@ -182,6 +183,11 @@ class Engine:
         # superseded-but-resumable plans: (template key, bucket, engine,
         # n_blocks, mesh) -> (plan, composed delta from its snapshot to now)
         self._resumable: dict = {}
+        # one lock for every serving counter below: updates that belong to
+        # one event (a microbatch's count + its engine tally) commit
+        # atomically, and stats() copies under the same lock, so a reader
+        # thread can never observe a torn snapshot (DESIGN.md 10.5)
+        self._stats_lock = threading.Lock()
         self._requests = 0
         self._microbatches = 0
         self._invalidation_events = 0
@@ -386,7 +392,8 @@ class Engine:
         res.timings["parse"] = t_parse
         res.timings["total"] = time.perf_counter() - t0
         res.timings["batch_total"] = res.timings["total"]  # batch of one
-        self._requests += 1
+        with self._stats_lock:
+            self._requests += 1
         self._bump_stage("parse", t_parse)
         return res
 
@@ -445,7 +452,8 @@ class Engine:
             # NOT self.execute(): that would refresh() mid-batch and let one
             # execute_many call mix two graph versions under mutation
             results[idx] = self._execute_pinned(q)
-        self._requests += len(prepared) - len(multipart)  # _execute_pinned counted the rest
+        with self._stats_lock:
+            self._requests += len(prepared) - len(multipart)  # _execute_pinned counted the rest
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------ #
@@ -478,12 +486,14 @@ class Engine:
         warm_before = plan.metrics.warm_resumes
         chi, sweeps = plan.execute(bindings)
         t_solve = time.perf_counter() - t
-        self._warm_solves += plan.metrics.warm_resumes - warm_before
-
-        self._microbatches += 1
-        self._engine_counts[plan.engine] = (
-            self._engine_counts.get(plan.engine, 0) + 1
-        )
+        with self._stats_lock:
+            # one atomic commit per microbatch event, so every stats()
+            # snapshot satisfies sum(engine_counts) == microbatches
+            self._warm_solves += plan.metrics.warm_resumes - warm_before
+            self._microbatches += 1
+            self._engine_counts[plan.engine] = (
+                self._engine_counts.get(plan.engine, 0) + 1
+            )
         self._bump_stage("plan", t_plan)
         self._bump_stage("solve", t_solve)
 
@@ -519,25 +529,40 @@ class Engine:
         return out
 
     def _bump_stage(self, stage: str, seconds: float) -> None:
-        self._stage_seconds[stage] = self._stage_seconds.get(stage, 0.0) + seconds
+        with self._stats_lock:
+            self._stage_seconds[stage] = (
+                self._stage_seconds.get(stage, 0.0) + seconds
+            )
 
     # ------------------------------------------------------------------ #
+    def stats(self) -> EngineMetrics:
+        """A *consistent* point-in-time snapshot of the serving counters.
+
+        The whole copy happens under the counters' lock, so concurrent
+        sessions and the serving loop can read mid-flight without torn
+        values: in every snapshot ``sum(engine_counts.values()) ==
+        microbatches``, and the dict copies never race their writers
+        (asserted under a multithreaded hammer in ``tests/test_serve.py``).
+        """
+        with self._stats_lock:
+            return EngineMetrics(
+                requests=self._requests,
+                microbatches=self._microbatches,
+                engine_counts=dict(self._engine_counts),
+                cache=self.cache.stats(),
+                stage_seconds=dict(self._stage_seconds),
+                invalidation_events=self._invalidation_events,
+                adj_invalidations=self._adj_invalidations,
+                plans_resumable=self._plans_resumable,
+                plans_resumed=self._plans_resumed,
+                resumes_declined=self._resumes_declined,
+                warm_resume_solves=self._warm_solves,
+                adj_rebuilds_saved=self._adj_rebuilds_saved,
+            )
+
     def metrics(self) -> EngineMetrics:
-        """A point-in-time snapshot of the serving counters."""
-        return EngineMetrics(
-            requests=self._requests,
-            microbatches=self._microbatches,
-            engine_counts=dict(self._engine_counts),
-            cache=self.cache.stats(),
-            stage_seconds=dict(self._stage_seconds),
-            invalidation_events=self._invalidation_events,
-            adj_invalidations=self._adj_invalidations,
-            plans_resumable=self._plans_resumable,
-            plans_resumed=self._plans_resumed,
-            resumes_declined=self._resumes_declined,
-            warm_resume_solves=self._warm_solves,
-            adj_rebuilds_saved=self._adj_rebuilds_saved,
-        )
+        """Alias of :meth:`stats` (the original name, kept for callers)."""
+        return self.stats()
 
 
 def _merge_union(partials: list[ExecResult], db: Graph) -> ExecResult:

@@ -1,0 +1,39 @@
+"""`repro.serve` — the async serving subsystem (DESIGN.md Sect. 10).
+
+Turns the synchronous ``repro.db`` surface into a traffic-shaped front
+end: a bounded, admission-controlled request queue with explicit shed
+outcomes, deficit-round-robin fairness across tenants sharing one warm
+engine, replica routing over immutable snapshots, a real flush timer, and
+streaming result delivery::
+
+    from repro.serve import AsyncServer
+
+    async with AsyncServer(db, replicas=2, max_queue=64) as server:
+        futs = [server.submit(q, tenant="alice") for q in queries]
+        results = await asyncio.gather(*futs)
+        assert all(r.outcome in ("ok", "overloaded", "deadline", "cost",
+                                 "error") for r in results)
+
+The open-loop saturation benchmark over this loop lives in
+``benchmarks/serve_bench.py`` (p50/p99 vs offered load -> the top-level
+``BENCH_serve.json`` trajectory); the closed-loop numbers in
+``benchmarks/engine_bench.py`` measure the engine underneath, not serving
+capacity.
+"""
+from .fairness import DeficitRoundRobin
+from .metrics import LatencyHistogram, MetricsSnapshot, ServeMetrics
+from .router import Replica, ReplicaRouter
+from .server import OUTCOMES, AsyncServer, ServeResult, stream_pages
+
+__all__ = [
+    "AsyncServer",
+    "DeficitRoundRobin",
+    "LatencyHistogram",
+    "MetricsSnapshot",
+    "OUTCOMES",
+    "Replica",
+    "ReplicaRouter",
+    "ServeMetrics",
+    "ServeResult",
+    "stream_pages",
+]

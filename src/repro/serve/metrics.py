@@ -1,0 +1,200 @@
+"""Serving observability: lock-consistent counters + latency histograms
+(DESIGN.md Sect. 10.5).
+
+The serving loop is judged by its tail, not its mean: an open-loop
+saturation sweep (``benchmarks/serve_bench.py``) needs p50/p99 queue and
+end-to-end latency, shed counts *by cause*, and per-tenant throughput —
+and it needs them as one *consistent* snapshot, because the dispatcher,
+the replica pool, and the benchmark reader all touch the counters from
+different threads.  Every mutation and the whole :meth:`ServeMetrics.
+snapshot` copy therefore run under one lock; a reader can never observe
+``completed`` incremented while its latency sample is still missing.
+
+Latencies go into fixed geometric buckets (:class:`LatencyHistogram`)
+rather than per-request lists, so a saturation run's memory cost is O(1)
+in request count and quantiles are one pass over ~40 ints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+# Geometric bucket upper edges in seconds: 50us .. ~190s, x1.5 per step.
+# Quantiles resolve to a bucket's upper edge, i.e. within +50% of the true
+# value — plenty for p50/p99 on a log-scale latency axis.
+_EDGES: tuple[float, ...] = tuple(50e-6 * 1.5**k for k in range(38))
+
+SHED_CAUSES = ("overloaded", "cost", "deadline")
+
+
+class LatencyHistogram:
+    """Fixed-bucket geometric latency histogram with quantile readout."""
+
+    __slots__ = ("counts", "n", "total")
+
+    def __init__(self):
+        self.counts = [0] * (len(_EDGES) + 1)  # +1: overflow bucket
+        self.n = 0
+        self.total = 0.0
+
+    def add(self, seconds: float) -> None:
+        """Record one latency sample (seconds)."""
+        lo, hi = 0, len(_EDGES)
+        while lo < hi:  # first bucket whose upper edge holds the sample
+            mid = (lo + hi) // 2
+            if seconds <= _EDGES[mid]:
+                hi = mid
+            else:
+                lo = mid + 1
+        self.counts[lo] += 1
+        self.n += 1
+        self.total += seconds
+
+    def quantile(self, q: float) -> float:
+        """Upper-edge estimate of the ``q`` quantile (0 when empty)."""
+        if self.n == 0:
+            return 0.0
+        rank = max(1, int(q * self.n + 0.999999))
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank:
+                return _EDGES[i] if i < len(_EDGES) else float("inf")
+        return _EDGES[-1]
+
+    @property
+    def mean(self) -> float:
+        """Mean of the recorded samples (exact, not bucketed)."""
+        return self.total / self.n if self.n else 0.0
+
+    def summary(self) -> dict[str, float]:
+        """``{n, mean_ms, p50_ms, p99_ms, max_bucket_ms}`` in milliseconds."""
+        return {
+            "n": self.n,
+            "mean_ms": self.mean * 1e3,
+            "p50_ms": self.quantile(0.50) * 1e3,
+            "p99_ms": self.quantile(0.99) * 1e3,
+        }
+
+
+@dataclasses.dataclass
+class MetricsSnapshot:
+    """One consistent copy of the serving counters (plain data, no locks)."""
+
+    submitted: int
+    admitted: int
+    completed: int
+    errors: int
+    shed: dict[str, int]  # cause -> count (SHED_CAUSES)
+    queue_depth: int
+    queue_peak: int
+    per_tenant: dict[str, dict[str, int]]  # tenant -> submitted/completed/shed
+    queue_wait: dict[str, float]  # LatencyHistogram.summary() of queue time
+    latency: dict[str, float]  # summary() of end-to-end completed latency
+    service: dict[str, float]  # summary() of per-batch service time
+
+    @property
+    def shed_total(self) -> int:
+        """All shed requests, any cause."""
+        return sum(self.shed.values())
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of submitted requests shed (0 when nothing submitted)."""
+        return self.shed_total / self.submitted if self.submitted else 0.0
+
+
+class ServeMetrics:
+    """Thread-safe serving counters with a single-lock snapshot.
+
+    Invariants every :meth:`snapshot` satisfies (asserted in tests):
+    ``submitted == admitted + shed_total + errors_at_admission`` is folded
+    into ``submitted >= admitted + shed_total`` and
+    ``admitted >= completed + shed["deadline"]`` while requests are in
+    flight, with equality once the server has drained.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._submitted = 0
+        self._admitted = 0
+        self._completed = 0
+        self._errors = 0
+        self._shed = {cause: 0 for cause in SHED_CAUSES}
+        self._queue_depth = 0
+        self._queue_peak = 0
+        self._per_tenant: dict[str, dict[str, int]] = {}
+        self._queue_wait = LatencyHistogram()
+        self._latency = LatencyHistogram()
+        self._service = LatencyHistogram()
+
+    # ------------------------------------------------------------------ #
+    def _tenant(self, tenant: str) -> dict[str, int]:
+        return self._per_tenant.setdefault(
+            tenant, {"submitted": 0, "completed": 0, "shed": 0, "errors": 0}
+        )
+
+    def on_submit(self, tenant: str) -> None:
+        """One request arrived at the admission gate."""
+        with self._lock:
+            self._submitted += 1
+            self._tenant(tenant)["submitted"] += 1
+
+    def on_admit(self, depth: int) -> None:
+        """One request passed admission; ``depth`` is the new queue depth."""
+        with self._lock:
+            self._admitted += 1
+            self._queue_depth = depth
+            self._queue_peak = max(self._queue_peak, depth)
+
+    def on_shed(self, tenant: str, cause: str, queue_s: float = 0.0) -> None:
+        """One request shed (``cause`` in :data:`SHED_CAUSES`)."""
+        with self._lock:
+            self._shed[cause] += 1
+            self._tenant(tenant)["shed"] += 1
+            if queue_s > 0.0:  # deadline sheds waited in queue first
+                self._queue_wait.add(queue_s)
+
+    def on_complete(self, tenant: str, queue_s: float, total_s: float) -> None:
+        """One admitted request finished with a result."""
+        with self._lock:
+            self._completed += 1
+            self._tenant(tenant)["completed"] += 1
+            self._queue_wait.add(queue_s)
+            self._latency.add(total_s)
+
+    def on_error(self, tenant: str) -> None:
+        """One request failed with an exception (its own, not its batch's)."""
+        with self._lock:
+            self._errors += 1
+            self._tenant(tenant)["errors"] += 1
+
+    def on_batch(self, service_s: float, depth: int) -> None:
+        """One microbatch finished executing; ``depth`` is the queue now."""
+        with self._lock:
+            self._service.add(service_s)
+            self._queue_depth = depth
+
+    def set_queue_depth(self, depth: int) -> None:
+        """Update the queue-depth gauge (and its high-water mark)."""
+        with self._lock:
+            self._queue_depth = depth
+            self._queue_peak = max(self._queue_peak, depth)
+
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> MetricsSnapshot:
+        """One consistent copy of every counter, under a single lock."""
+        with self._lock:
+            return MetricsSnapshot(
+                submitted=self._submitted,
+                admitted=self._admitted,
+                completed=self._completed,
+                errors=self._errors,
+                shed=dict(self._shed),
+                queue_depth=self._queue_depth,
+                queue_peak=self._queue_peak,
+                per_tenant={t: dict(d) for t, d in self._per_tenant.items()},
+                queue_wait=self._queue_wait.summary(),
+                latency=self._latency.summary(),
+                service=self._service.summary(),
+            )

@@ -1,0 +1,180 @@
+"""Replica routing: N read replicas over immutable snapshots (DESIGN.md
+Sect. 10.4).
+
+Read replicas are nearly free in this system: a :class:`~repro.db.graphdb.
+GraphDB` hands out *immutable* graph snapshots, and plan-cache keys carry
+the versioned fingerprint, so any number of :class:`~repro.engine.engine.
+Engine` instances can serve the same database concurrently without
+coordination — each owns its plan cache, its adjacency uploads, and its own
+lock, and ``Engine.execute_prepared`` pins exactly one snapshot per batch.
+
+What replicas add is *parallel service*: the solver path holds the GIL only
+between XLA dispatches, so two replicas executing on a thread pool overlap
+their fixpoint compute.  What they must not add is *torn reads*: a replica
+adopting a mutation halfway through a batch.  Two mechanisms fence that:
+
+* snapshot pinning — a batch refreshes at its start and never again, so
+  every request in it sees one graph version (a mutation mid-batch lands in
+  the *next* batch);
+* mutation epochs — :meth:`ReplicaRouter.fence` refreshes every replica to
+  the source's current version and returns that version; after a fence, no
+  replica can serve a pre-mutation snapshot.
+
+Routing itself is least-in-flight (ties broken round-robin), which under
+uniform service times degenerates to round-robin and under skewed templates
+keeps a slow solve from queueing followers behind it.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Sequence
+
+from repro.db.results import ResultSet
+from repro.engine.engine import Engine
+
+
+class Replica:
+    """One read replica: a private engine, lock, and in-flight gauge."""
+
+    __slots__ = ("name", "engine", "lock", "in_flight", "batches")
+
+    def __init__(self, name: str, engine: Engine):
+        self.name = name
+        self.engine = engine
+        self.lock = threading.Lock()
+        self.in_flight = 0  # batches routed here and not yet finished
+        self.batches = 0  # total batches served
+
+
+class ReplicaRouter:
+    """Route prepared batches across N engine replicas of one database.
+
+    Replicas inherit the database's engine configuration (engine
+    preference, buckets, mesh, incremental maintenance) so a routed request
+    behaves exactly like ``db.query`` modulo which plan cache warms up.
+    """
+
+    def __init__(self, db, n_replicas: int = 2):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        self._db = db
+        proto = db._engine  # replicate the database's engine configuration
+        self.replicas = [
+            Replica(
+                f"r{i}",
+                Engine(
+                    db,
+                    engine=proto.engine_pref,
+                    cache_capacity=proto.cache.capacity,
+                    buckets=proto.buckets,
+                    backend=proto.backend,
+                    mesh=proto.mesh,
+                    n_blocks=proto.n_blocks,
+                    incremental=proto.incremental,
+                ),
+            )
+            for i in range(n_replicas)
+        ]
+        self._route_lock = threading.Lock()
+        self._rr = 0  # round-robin tiebreaker
+
+    def __len__(self) -> int:
+        """Number of replicas."""
+        return len(self.replicas)
+
+    # ------------------------------------------------------------------ #
+    def route(self) -> Replica:
+        """Pick the least-loaded replica and count the batch in flight."""
+        with self._route_lock:
+            self._rr += 1
+            order = self.replicas[self._rr % len(self.replicas):] + \
+                self.replicas[: self._rr % len(self.replicas)]
+            rep = min(order, key=lambda r: r.in_flight)
+            rep.in_flight += 1
+            return rep
+
+    def release(self, rep: Replica) -> None:
+        """Return a routed batch slot."""
+        with self._route_lock:
+            rep.in_flight -= 1
+            rep.batches += 1
+
+    def execute_isolated(
+        self, prepared: Sequence
+    ) -> tuple[list[ResultSet | Exception], str]:
+        """Execute one prepared batch on a routed replica.
+
+        Returns ``(outcomes, replica_name)`` where each outcome is either a
+        :class:`ResultSet` or the exception *that request* raised.  The
+        fast path executes the whole batch in one microbatched call; if it
+        raises, the batch re-runs request-by-request so one poisoned
+        request cannot take its siblings' results down with it (the same
+        isolation contract as ``Session.flush``).
+        """
+        rep = self.route()
+        try:
+            with rep.lock:
+                try:
+                    raws = rep.engine.execute_prepared(list(prepared))
+                    snap = rep.engine.db
+                    return [ResultSet(r, snap) for r in raws], rep.name
+                except Exception:
+                    out: list[ResultSet | Exception] = []
+                    for pr in prepared:
+                        try:
+                            raw = rep.engine.execute_prepared([pr])[0]
+                            out.append(ResultSet(raw, rep.engine.db))
+                        except Exception as exc:  # this request's own fault
+                            out.append(exc)
+                    return out, rep.name
+        finally:
+            self.release(rep)
+
+    # ------------------------------------------------------------------ #
+    def fence(self) -> int:
+        """Advance every replica to the source's current mutation epoch.
+
+        Returns the fenced version: after this call no replica will serve a
+        snapshot older than it (reads started before the fence keep their
+        pinned — complete, never half-applied — older snapshot).
+        """
+        version = self._db.version
+        for rep in self.replicas:
+            with rep.lock:
+                rep.engine.refresh()
+        return version
+
+    def versions(self) -> list[int | None]:
+        """Each replica's currently-adopted source version (for tests)."""
+        return [rep.engine._version for rep in self.replicas]
+
+    def stats(self) -> list:
+        """Per-replica :class:`~repro.engine.engine.EngineMetrics`."""
+        return [rep.engine.stats() for rep in self.replicas]
+
+    def aggregate(self) -> dict[str, int | float]:
+        """Summed serving counters across replicas (the CLI's one-liner)."""
+        agg = {
+            "requests": 0, "microbatches": 0, "cache_hits": 0,
+            "cache_misses": 0, "plan_builds": 0, "plan_invalidations": 0,
+            "plans_resumable": 0, "plans_resumed": 0, "warm_resume_solves": 0,
+            "resumes_declined": 0, "adj_rebuilds_saved": 0,
+        }
+        engines: dict[str, int] = {}
+        for m in self.stats():
+            agg["requests"] += m.requests
+            agg["microbatches"] += m.microbatches
+            agg["cache_hits"] += m.cache.hits
+            agg["cache_misses"] += m.cache.misses
+            agg["plan_builds"] += m.plan_builds
+            agg["plan_invalidations"] += m.plan_invalidations
+            agg["plans_resumable"] += m.plans_resumable
+            agg["plans_resumed"] += m.plans_resumed
+            agg["warm_resume_solves"] += m.warm_resume_solves
+            agg["resumes_declined"] += m.resumes_declined
+            agg["adj_rebuilds_saved"] += m.adj_rebuilds_saved
+            for eng, cnt in m.engine_counts.items():
+                engines[eng] = engines.get(eng, 0) + cnt
+        agg["engine_counts"] = engines
+        agg["batches_per_replica"] = [r.batches for r in self.replicas]
+        return agg

@@ -1,0 +1,405 @@
+"""Admission-controlled asyncio serving loop (DESIGN.md Sect. 10).
+
+The paper positions dual simulation as a pre-filter *inside a database
+system serving real traffic*; Pérez et al. put the worst case of that
+traffic at Pspace-complete, so a production front end must bound what it
+accepts — unbounded queueing turns one pathological template into
+everyone's latency.  :class:`AsyncServer` is that front end over the stable
+``repro.db`` surface:
+
+* **admission control** — a bounded queue (``max_queue``), a per-request
+  model-cost cap (``cost_cap``, priced by :func:`repro.engine.cost.
+  admission_estimate`), and per-request deadlines.  A request that cannot
+  be admitted is *shed immediately* with an explicit outcome
+  (``overloaded`` / ``cost`` / ``deadline``) instead of queueing without
+  bound — the backpressure contract is "a fast no, never a slow maybe".
+* **per-tenant fairness** — admitted requests enter a deficit-round-robin
+  scheduler (:mod:`repro.serve.fairness`); a template storm from one
+  tenant cannot starve the others' dispatch slots.
+* **replica routing** — batches execute on a pool of engine replicas over
+  immutable snapshots (:mod:`repro.serve.router`), overlapping service.
+* **real flush timer** — the dispatcher releases a batch when it fills
+  (``max_batch``) or when the oldest admitted request has waited
+  ``max_delay_ms``, whichever first; unlike the cooperative
+  :class:`~repro.db.session.Session` policy this timer fires without any
+  further submit arriving.
+* **streaming delivery** — :func:`stream_pages` paginates a result set as
+  an async iterator, so a large survivor set never materializes in one
+  response.
+
+Every submitted request resolves to a :class:`ServeResult`; the server
+never leaves a future unresolved, including through :meth:`AsyncServer.
+stop` (queued work is drained).  All submissions must happen on the event
+loop that started the server; execution happens on a thread pool sized to
+the replica count, and mutations go through the shared ``GraphDB`` exactly
+as before — the server is a pure front end.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import AsyncIterator
+
+from repro.db.results import ResultSet
+from repro.engine import cost as cost_mod
+
+from .fairness import DeficitRoundRobin
+from .metrics import ServeMetrics
+from .router import ReplicaRouter
+
+#: ServeResult.outcome values: exactly one per submitted request.
+OUTCOMES = ("ok", "overloaded", "cost", "deadline", "error")
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Terminal outcome of one submitted request.
+
+    ``outcome`` is one of :data:`OUTCOMES`; ``result`` is set iff the
+    outcome is ``"ok"``.  ``queue_ms`` is admission-to-dispatch wait,
+    ``service_ms`` the wall time of the microbatch the request rode in
+    (a batch property, shared by its riders — the per-request fair share
+    lives in ``result.timings``), ``total_ms`` submit-to-resolution.
+    """
+
+    outcome: str
+    tenant: str
+    result: ResultSet | None = None
+    error: Exception | None = None
+    detail: str = ""
+    queue_ms: float = 0.0
+    service_ms: float = 0.0
+    total_ms: float = 0.0
+    replica: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        """True iff the request completed with a result."""
+        return self.outcome == "ok"
+
+
+class _Pending:
+    """One admitted request waiting in the fair scheduler."""
+
+    __slots__ = ("prepared", "tenant", "t_submit", "deadline", "future")
+
+    def __init__(self, prepared, tenant, t_submit, deadline, future):
+        self.prepared = prepared
+        self.tenant = tenant
+        self.t_submit = t_submit
+        self.deadline = deadline
+        self.future = future
+
+
+class AsyncServer:
+    """Admission-controlled, tenant-fair, replicated serving loop.
+
+    Usage::
+
+        async with AsyncServer(db, replicas=2, max_queue=64) as server:
+            results = await asyncio.gather(
+                *[server.submit(q, tenant="alice") for q in queries]
+            )
+
+    Parameters: ``replicas`` engine replicas (thread-pool width);
+    ``max_queue`` bounds admitted-but-undispatched requests; ``max_batch``
+    caps one dispatch (default: the engine's largest microbatch bucket);
+    ``max_delay_ms`` is the real flush timer; ``default_deadline_ms``
+    bounds queue wait per request (a request older than its deadline at
+    dispatch time is shed, never executed); ``cost_cap`` rejects requests
+    whose :func:`~repro.engine.cost.admission_estimate` exceeds it;
+    ``tenant_weights``/``quantum`` configure the fair scheduler.
+    """
+
+    def __init__(
+        self,
+        db,
+        *,
+        replicas: int = 2,
+        max_queue: int = 256,
+        max_batch: int | None = None,
+        max_delay_ms: float = 2.0,
+        default_deadline_ms: float = 1000.0,
+        cost_cap: float | None = None,
+        tenant_weights: dict[str, float] | None = None,
+        quantum: float = 4.0,
+    ):
+        if max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        self._db = db
+        self.max_queue = max_queue
+        self.max_batch = (
+            max_batch if max_batch is not None else max(db._engine.buckets)
+        )
+        self.max_delay = max_delay_ms / 1e3
+        self.default_deadline = default_deadline_ms / 1e3
+        self.cost_cap = cost_cap
+        self.router = ReplicaRouter(db, replicas)
+        self.metrics = ServeMetrics()
+        self._scheduler = DeficitRoundRobin(
+            quantum=quantum, weights=tenant_weights
+        )
+        self._pool = ThreadPoolExecutor(
+            max_workers=replicas, thread_name_prefix="repro-serve"
+        )
+        self._cost_memo: dict[str, float] = {}  # template key -> admission cost
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._wake: asyncio.Event | None = None
+        self._sem: asyncio.Semaphore | None = None
+        self._dispatcher: asyncio.Task | None = None
+        self._batch_tasks: set[asyncio.Task] = set()
+        self._running = False
+        self._stopping = False
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    async def start(self) -> "AsyncServer":
+        """Bind to the running loop and start the dispatcher task."""
+        if self._running:
+            raise RuntimeError("server already started")
+        self._loop = asyncio.get_running_loop()
+        self._wake = asyncio.Event()
+        self._sem = asyncio.Semaphore(len(self.router))
+        self._running = True
+        self._stopping = False
+        self._dispatcher = self._loop.create_task(self._dispatch_loop())
+        return self
+
+    async def stop(self) -> None:
+        """Drain queued work, resolve every future, and shut down.
+
+        The backpressure contract survives shutdown: nothing admitted is
+        ever left unresolved (drained requests still honor deadlines).
+        """
+        if not self._running:
+            return
+        self._stopping = True
+        self._running = False
+        self._wake.set()
+        await self._dispatcher
+        if self._batch_tasks:
+            await asyncio.gather(*self._batch_tasks)
+        self._pool.shutdown(wait=True)
+
+    async def __aenter__(self) -> "AsyncServer":
+        return await self.start()
+
+    async def __aexit__(self, exc_type, exc, tb) -> None:
+        await self.stop()
+
+    async def fence(self) -> int:
+        """Advance every replica past the latest mutation epoch.
+
+        Off-loop (replica locks may be held by in-flight batches).
+        Returns the fenced version; see :meth:`ReplicaRouter.fence`.
+        """
+        return await self._loop.run_in_executor(self._pool, self.router.fence)
+
+    # ------------------------------------------------------------------ #
+    # admission
+    # ------------------------------------------------------------------ #
+    def submit(
+        self,
+        query,
+        *,
+        tenant: str = "default",
+        deadline_ms: float | None = None,
+    ) -> "asyncio.Future[ServeResult]":
+        """Admit or shed one request; returns a future of its outcome.
+
+        Synchronous on purpose: admission is the *cheap* path (parse +
+        canonicalize + O(1) checks) and must answer immediately — a shed
+        request's future is already resolved when this returns.  Must be
+        called on the server's event loop.  ``query`` may be text, a
+        parsed query, or a ``Q`` builder.
+        """
+        if not self._running:
+            raise RuntimeError("server is not running")
+        fut: asyncio.Future[ServeResult] = self._loop.create_future()
+        now = time.monotonic()
+        self.metrics.on_submit(tenant)
+
+        # gate 1: bounded queue — shed instead of queueing without bound
+        if len(self._scheduler) >= self.max_queue:
+            self.metrics.on_shed(tenant, "overloaded")
+            fut.set_result(ServeResult(
+                outcome="overloaded", tenant=tenant,
+                detail=f"queue full ({self.max_queue})",
+            ))
+            return fut
+
+        # parse + canonicalize once; syntax errors are the *request's*
+        # fault and resolve its own future, they never enter the queue
+        try:
+            prepared = self._db._engine.prepare(self._db._coerce(query))
+        except Exception as exc:
+            self.metrics.on_error(tenant)
+            fut.set_result(ServeResult(
+                outcome="error", tenant=tenant, error=exc,
+                detail="rejected at parse",
+            ))
+            return fut
+
+        # gate 2: model-cost cap (Pspace-complete worst cases stay out)
+        if self.cost_cap is not None:
+            est = self._admission_cost(prepared[0])
+            if est > self.cost_cap:
+                self.metrics.on_shed(tenant, "cost")
+                fut.set_result(ServeResult(
+                    outcome="cost", tenant=tenant,
+                    detail=f"estimated cost {est:.3g} > cap {self.cost_cap:.3g}",
+                ))
+                return fut
+
+        # gate 3: deadline already unmeetable
+        deadline_s = (
+            deadline_ms if deadline_ms is not None else self.default_deadline * 1e3
+        ) / 1e3
+        if deadline_s <= 0:
+            self.metrics.on_shed(tenant, "deadline")
+            fut.set_result(ServeResult(
+                outcome="deadline", tenant=tenant, detail="expired at admission",
+            ))
+            return fut
+
+        item = _Pending(prepared, tenant, now, now + deadline_s, fut)
+        depth = self._scheduler.enqueue(tenant, item)
+        self.metrics.on_admit(depth)
+        self._wake.set()
+        return fut
+
+    def _admission_cost(self, query) -> float:
+        """Memoized :func:`~repro.engine.cost.admission_estimate` per query.
+
+        Memoized on the query text (template keys collapse constants, but
+        the estimate is constant-independent anyway); the memo resets when
+        the graph mutates, since the estimate prices the current snapshot.
+        """
+        key = f"v{self._db.version}:{query!r}"
+        est = self._cost_memo.get(key)
+        if est is None:
+            if len(self._cost_memo) > 4096:
+                self._cost_memo.clear()
+            est = cost_mod.admission_estimate(self._db.graph, query)
+            self._cost_memo[key] = est
+        return est
+
+    # ------------------------------------------------------------------ #
+    # dispatch
+    # ------------------------------------------------------------------ #
+    @property
+    def queue_depth(self) -> int:
+        """Admitted requests not yet dispatched."""
+        return len(self._scheduler)
+
+    async def _dispatch_loop(self) -> None:
+        """Single dispatcher: batch release policy + fair draining.
+
+        Releases a batch when it can fill ``max_batch``, when the oldest
+        admitted request has waited ``max_delay``, or on shutdown drain.
+        Runs as the only consumer of the scheduler, so the scheduler needs
+        no lock (submissions happen on the same loop).
+        """
+        while True:
+            depth = len(self._scheduler)
+            if depth == 0:
+                if self._stopping:
+                    return
+                self._wake.clear()
+                await self._wake.wait()
+                continue
+            oldest = min(p.t_submit for p in self._scheduler.heads())
+            age = time.monotonic() - oldest
+            if depth >= self.max_batch or age >= self.max_delay or self._stopping:
+                await self._sem.acquire()
+                batch = self._scheduler.take(self.max_batch)
+                self.metrics.set_queue_depth(len(self._scheduler))
+                task = self._loop.create_task(self._run_batch(batch))
+                self._batch_tasks.add(task)
+                task.add_done_callback(self._batch_tasks.discard)
+            else:
+                self._wake.clear()
+                try:
+                    await asyncio.wait_for(
+                        self._wake.wait(), timeout=self.max_delay - age
+                    )
+                except asyncio.TimeoutError:
+                    pass  # flush timer fired: release the partial batch
+
+    async def _run_batch(self, batch) -> None:
+        """Execute one fair-share batch on a routed replica."""
+        try:
+            now = time.monotonic()
+            live: list[_Pending] = []
+            for tenant, p in batch:
+                if now > p.deadline:
+                    # admitted but queued past its deadline: shed at
+                    # dispatch, never executed — this is what bounds the
+                    # tail latency of everything we *do* execute
+                    self.metrics.on_shed(tenant, "deadline", now - p.t_submit)
+                    self._resolve(p, ServeResult(
+                        outcome="deadline", tenant=tenant,
+                        detail="deadline exceeded in queue",
+                        queue_ms=(now - p.t_submit) * 1e3,
+                        total_ms=(now - p.t_submit) * 1e3,
+                    ))
+                else:
+                    live.append(p)
+            if not live:
+                return
+            t0 = time.monotonic()
+            outcomes, replica = await self._loop.run_in_executor(
+                self._pool,
+                self.router.execute_isolated,
+                [p.prepared for p in live],
+            )
+            t1 = time.monotonic()
+            service_ms = (t1 - t0) * 1e3
+            self.metrics.on_batch(t1 - t0, len(self._scheduler))
+            for p, out in zip(live, outcomes):
+                queue_s = t0 - p.t_submit
+                total_s = t1 - p.t_submit
+                if isinstance(out, Exception):
+                    self.metrics.on_error(p.tenant)
+                    self._resolve(p, ServeResult(
+                        outcome="error", tenant=p.tenant, error=out,
+                        queue_ms=queue_s * 1e3, service_ms=service_ms,
+                        total_ms=total_s * 1e3, replica=replica,
+                    ))
+                else:
+                    self.metrics.on_complete(p.tenant, queue_s, total_s)
+                    self._resolve(p, ServeResult(
+                        outcome="ok", tenant=p.tenant, result=out,
+                        queue_ms=queue_s * 1e3, service_ms=service_ms,
+                        total_ms=total_s * 1e3, replica=replica,
+                    ))
+        finally:
+            self._sem.release()
+
+    @staticmethod
+    def _resolve(p: _Pending, result: ServeResult) -> None:
+        if not p.future.done():  # caller may have cancelled
+            p.future.set_result(result)
+
+
+async def stream_pages(
+    rs: ResultSet, page_size: int = 100
+) -> AsyncIterator[list[tuple[str, str, str]]]:
+    """Async-paginate a result set's survivor triples.
+
+    Yields name-triple pages of at most ``page_size``; each page
+    materializes on the default executor so a huge survivor set neither
+    blocks the event loop nor lands in one response.  The result set pins
+    its snapshot, so pagination stays consistent across later mutations.
+    """
+    loop = asyncio.get_running_loop()
+    offset = 0
+    while True:
+        page = await loop.run_in_executor(None, rs.page, offset, page_size)
+        if not page:
+            return
+        yield page
+        offset += len(page)
