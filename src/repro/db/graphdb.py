@@ -115,9 +115,10 @@ class GraphDB:
         self._base_fp = graph_fingerprint(graph)
         self._node_index = {n: i for i, n in enumerate(graph.node_names)}
         self._label_index = {n: i for i, n in enumerate(graph.label_names)}
-        self._edge_set: set[tuple[int, int, int]] | None = None  # lazy
+        # lazily built by _edges(); insert/delete mutate it in place
+        self._edge_set: set[tuple[int, int, int]] | None = None  # guarded-by: _lock
         # (version, delta that produced it) — consumed by Engine.refresh()
-        self._delta_log: deque[tuple[int, GraphDelta]] = deque(
+        self._delta_log: deque[tuple[int, GraphDelta]] = deque(  # guarded-by: _lock
             maxlen=DELTA_LOG_LIMIT
         )
         self._lock = threading.RLock()
@@ -187,7 +188,10 @@ class GraphDB:
         )
         if None in ids:
             return False
-        return ids in self._edges()
+        # RL3: _edges() lazily builds and caches _edge_set; unlocked it
+        # races insert/delete mutating the same set (the lock is re-entrant)
+        with self._lock:
+            return ids in self._edges()
 
     def __len__(self) -> int:
         return self.n_triples
@@ -201,7 +205,7 @@ class GraphDB:
     # ------------------------------------------------------------------ #
     # mutation
     # ------------------------------------------------------------------ #
-    def _edges(self) -> set[tuple[int, int, int]]:
+    def _edges(self) -> set[tuple[int, int, int]]:  # requires-lock: _lock
         if self._edge_set is None:
             self._edge_set = {tuple(row) for row in self._graph.triples.tolist()}
         return self._edge_set
@@ -325,7 +329,7 @@ class GraphDB:
             )
             return len(doomed)
 
-    def _commit(self, graph: Graph, delta: GraphDelta) -> None:
+    def _commit(self, graph: Graph, delta: GraphDelta) -> None:  # requires-lock: _lock
         self._graph = graph
         self.version += 1
         self._delta_log.append((self.version, delta))

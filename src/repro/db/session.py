@@ -97,21 +97,27 @@ class _BackgroundFlusher(threading.Thread):
         super().__init__(name="session-flusher", daemon=True)
         self._session = session
         self.cv = threading.Condition()
-        self._stop = False
+        self._stop = False  # guarded-by: cv
+        # The flusher's own copy of the armed deadline, handed over by
+        # poke().  RL3: reading session._deadline here would cross into
+        # state guarded by the *session* lock while holding only the cv —
+        # and taking the session lock under the cv would invert submit's
+        # `_lock -> cv` acquisition order (deadlock).
+        self._armed: float | None = None  # guarded-by: cv
 
     def run(self) -> None:
         while True:
             with self.cv:
                 if self._stop:
                     return
-                deadline = self._session._deadline
                 wait = (
-                    None if deadline is None
-                    else deadline - time.monotonic()
+                    None if self._armed is None
+                    else self._armed - time.monotonic()
                 )
                 if wait is None or wait > 0:
                     self.cv.wait(timeout=wait)
                     continue
+                self._armed = None  # consumed: re-armed by the next poke()
             # deadline passed: flush outside the cv (flush takes the
             # session lock; submit holds it while notifying)
             self._session.flush()
@@ -122,9 +128,10 @@ class _BackgroundFlusher(threading.Thread):
             self._stop = True
             self.cv.notify()
 
-    def poke(self) -> None:
-        """Re-examine the (re)armed deadline."""
+    def poke(self, deadline: float) -> None:
+        """Hand over a freshly armed deadline (called by submit)."""
         with self.cv:
+            self._armed = deadline
             self.cv.notify()
 
 
@@ -149,18 +156,18 @@ class Session:
         )
         if self.max_pending < 1:
             raise ValueError("max_pending must be >= 1")
-        self._pending: list[
+        self._pending: list[  # guarded-by: _lock
             tuple[ResultFuture, tuple[Query, TemplateInstance | None]]
         ] = []
         # per template key: the *unique* constant tuples pending.  Duplicate
         # submits share one instance slot in the microbatch (the batcher
         # dedups before chunking), so only unique tuples count toward the
         # bucket cap — N identical submits never force an early flush.
-        self._group_consts: dict[str, set[tuple[str, ...]]] = {}
-        self._deadline: float | None = None
-        self._closed = False
-        self.submitted = 0
-        self.flushes = 0
+        self._group_consts: dict[str, set[tuple[str, ...]]] = {}  # guarded-by: _lock
+        self._deadline: float | None = None  # guarded-by: _lock
+        self._closed = False  # guarded-by: _lock
+        self.submitted = 0  # guarded-by: _lock
+        self.flushes = 0  # guarded-by: _lock
         self._lock = threading.RLock()
         self._flusher = _BackgroundFlusher(self) if auto_flush else None
         if self._flusher is not None:
@@ -170,7 +177,8 @@ class Session:
     @property
     def pending(self) -> int:
         """Requests submitted but not yet released to the engine."""
-        return len(self._pending)
+        with self._lock:  # RL3: submits/flushes mutate the list concurrently
+            return len(self._pending)
 
     def submit(self, query) -> ResultFuture:
         """Queue one request; returns a future resolved at the next flush.
@@ -195,7 +203,7 @@ class Session:
             if self._deadline is None:
                 self._deadline = now + self.max_delay_ms / 1e3
                 if self._flusher is not None:
-                    self._flusher.poke()  # a fresh deadline was armed
+                    self._flusher.poke(self._deadline)  # hand the deadline over
             if inst is not None:
                 # same template key => same microbatch; unique constant
                 # tuples count toward its cap (duplicates ride a slot)
@@ -232,13 +240,13 @@ class Session:
             except Exception:
                 # isolate the poisoned request: siblings get their results,
                 # the offender's future carries its own exception
-                for fut, prep in pending:
+                for fut, prep in pending:  # rl4: track=fut
                     try:
                         fut._resolve(self._db._execute_prepared([prep])[0])
                     except Exception as exc:
                         fut._reject(exc)
             else:
-                for (fut, _), rs in zip(pending, results):
+                for (fut, _), rs in zip(pending, results):  # rl4: track=fut
                     fut._resolve(rs)
             self.flushes += 1
             return len(pending)
@@ -272,8 +280,12 @@ class Session:
                 self._flusher.stop()
 
     def __repr__(self) -> str:
+        with self._lock:  # RL3: one consistent snapshot of the counters
+            n_pending, submitted, flushes = (
+                len(self._pending), self.submitted, self.flushes,
+            )
         return (
-            f"Session(pending={self.pending}, submitted={self.submitted}, "
-            f"flushes={self.flushes}, max_delay_ms={self.max_delay_ms}, "
+            f"Session(pending={n_pending}, submitted={submitted}, "
+            f"flushes={flushes}, max_delay_ms={self.max_delay_ms}, "
             f"max_pending={self.max_pending})"
         )

@@ -188,17 +188,17 @@ class Engine:
         # atomically, and stats() copies under the same lock, so a reader
         # thread can never observe a torn snapshot (DESIGN.md 10.5)
         self._stats_lock = threading.Lock()
-        self._requests = 0
-        self._microbatches = 0
-        self._invalidation_events = 0
-        self._adj_invalidations = 0
-        self._plans_resumable = 0
-        self._plans_resumed = 0
-        self._resumes_declined = 0
-        self._warm_solves = 0
-        self._adj_rebuilds_saved = 0
-        self._engine_counts: dict[str, int] = {}
-        self._stage_seconds: dict[str, float] = {}
+        self._requests = 0  # guarded-by: _stats_lock
+        self._microbatches = 0  # guarded-by: _stats_lock
+        self._invalidation_events = 0  # guarded-by: _stats_lock
+        self._adj_invalidations = 0  # guarded-by: _stats_lock
+        self._plans_resumable = 0  # guarded-by: _stats_lock
+        self._plans_resumed = 0  # guarded-by: _stats_lock
+        self._resumes_declined = 0  # guarded-by: _stats_lock
+        self._warm_solves = 0  # guarded-by: _stats_lock
+        self._adj_rebuilds_saved = 0  # guarded-by: _stats_lock
+        self._engine_counts: dict[str, int] = {}  # guarded-by: _stats_lock
+        self._stage_seconds: dict[str, float] = {}  # guarded-by: _stats_lock
 
     # ------------------------------------------------------------------ #
     # versioned invalidation (repro.db.GraphDB mutations)
@@ -251,6 +251,7 @@ class Engine:
         self._version = version
         resumable = delta is not None and delta.shape_stable
 
+        staged = declined = adj_saved = adj_dropped = 0
         if resumable:
             # earlier-staged plans ride forward under the composed delta
             self._resumable = {
@@ -260,17 +261,17 @@ class Engine:
             moved = self.cache.pop_matching(lambda key: key[1] == prev_fp)
             for key, plan in moved:
                 self._resumable[(key[0], *key[2:])] = (plan, delta)
-            self._plans_resumable += len(moved)
+            staged = len(moved)
             # bounded staging: never pin more superseded plans (device
             # operands + chi memos) than the live cache could hold — the
             # oldest staged entries go cold, counted as declined resumes
             while len(self._resumable) > self.cache.capacity:
                 self._resumable.pop(next(iter(self._resumable)))
-                self._resumes_declined += 1
+                declined += 1
         else:
             # staged plans cannot survive a dictionary/shape change (or a
             # truncated delta log): they go cold, counted as declined
-            self._resumes_declined += len(self._resumable)
+            declined = len(self._resumable)
             self._resumable.clear()
 
         keep_fp = {self.fingerprint, prev_fp}
@@ -284,12 +285,19 @@ class Engine:
                     # untouched labels: the arrays are bit-identical in the
                     # new snapshot — re-key instead of rebuilding later
                     self._adj_cache[k] = (self.db, adj)
-                    self._adj_rebuilds_saved += 1
+                    adj_saved += 1
                 continue  # retention window: in-flight plans share these
             del self._adj_cache[k]
-            self._adj_invalidations += 1
+            adj_dropped += 1
         self._prev_db = prev_db
-        self._invalidation_events += 1
+        # RL3: the whole refresh commits as one atomic stats event — a
+        # stats() reader on another thread sees all of it or none of it
+        with self._stats_lock:
+            self._plans_resumable += staged
+            self._resumes_declined += declined
+            self._adj_rebuilds_saved += adj_saved
+            self._adj_invalidations += adj_dropped
+            self._invalidation_events += 1
         return dropped
 
     # ------------------------------------------------------------------ #
@@ -347,12 +355,15 @@ class Engine:
                         self.db, delta, self._node_index, self._adj_cache
                     )
                 except ValueError:
-                    self._resumes_declined += 1  # not actually patchable
+                    with self._stats_lock:
+                        self._resumes_declined += 1  # not actually patchable
                 else:
-                    self._plans_resumed += 1
+                    with self._stats_lock:
+                        self._plans_resumed += 1
                     return plan
             else:
-                self._resumes_declined += 1
+                with self._stats_lock:
+                    self._resumes_declined += 1
         return CompiledPlan(
             template,
             self.db,

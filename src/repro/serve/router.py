@@ -42,8 +42,10 @@ class Replica:
         self.name = name
         self.engine = engine
         self.lock = threading.Lock()
-        self.in_flight = 0  # batches routed here and not yet finished
-        self.batches = 0  # total batches served
+        # Both gauges belong to the router's routing decision, so they are
+        # guarded by the *router's* lock, not this replica's engine lock.
+        self.in_flight = 0  # guarded-by: self._route_lock
+        self.batches = 0  # guarded-by: self._route_lock
 
 
 class ReplicaRouter:
@@ -76,7 +78,7 @@ class ReplicaRouter:
             for i in range(n_replicas)
         ]
         self._route_lock = threading.Lock()
-        self._rr = 0  # round-robin tiebreaker
+        self._rr = 0  # guarded-by: _route_lock (round-robin tiebreaker)
 
     def __len__(self) -> int:
         """Number of replicas."""
@@ -146,7 +148,11 @@ class ReplicaRouter:
 
     def versions(self) -> list[int | None]:
         """Each replica's currently-adopted source version (for tests)."""
-        return [rep.engine._version for rep in self.replicas]
+        out: list[int | None] = []
+        for rep in self.replicas:
+            with rep.lock:  # RL3: fence() mutates the engine under rep.lock
+                out.append(rep.engine._version)
+        return out
 
     def stats(self) -> list:
         """Per-replica :class:`~repro.engine.engine.EngineMetrics`."""
@@ -176,5 +182,6 @@ class ReplicaRouter:
             for eng, cnt in m.engine_counts.items():
                 engines[eng] = engines.get(eng, 0) + cnt
         agg["engine_counts"] = engines
-        agg["batches_per_replica"] = [r.batches for r in self.replicas]
+        with self._route_lock:  # RL3: `batches` is mutated under _route_lock
+            agg["batches_per_replica"] = [r.batches for r in self.replicas]
         return agg

@@ -334,7 +334,7 @@ class AsyncServer:
         try:
             now = time.monotonic()
             live: list[_Pending] = []
-            for tenant, p in batch:
+            for tenant, p in batch:  # rl4: track=p
                 if now > p.deadline:
                     # admitted but queued past its deadline: shed at
                     # dispatch, never executed — this is what bounds the
@@ -359,7 +359,7 @@ class AsyncServer:
             t1 = time.monotonic()
             service_ms = (t1 - t0) * 1e3
             self.metrics.on_batch(t1 - t0, len(self._scheduler))
-            for p, out in zip(live, outcomes):
+            for p, out in zip(live, outcomes):  # rl4: track=p
                 queue_s = t0 - p.t_submit
                 total_s = t1 - p.t_submit
                 if isinstance(out, Exception):

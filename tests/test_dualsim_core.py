@@ -264,43 +264,11 @@ def test_packed_fused_impls_match():
 
 
 # --------------------------------------------------------------------- #
-# packed-chi invariants: the while_loop never packs or unpacks (ISSUE 5)
+# packed-chi invariants: the while_loop never packs or unpacks (ISSUE 5).
+# The jaxpr machinery lives in tools.reprolint.dynamic so the same check
+# runs standalone in the CI reprolint job (ISSUE 7).
 # --------------------------------------------------------------------- #
-def _collect_while_eqns(jaxpr, out):
-    """All `while` equations reachable without entering pallas_call."""
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            continue
-        if eqn.primitive.name == "while":
-            out.append(eqn)
-        for param in eqn.params.values():
-            for sub in _sub_jaxprs(param):
-                _collect_while_eqns(sub, out)
-    return out
-
-
-def _sub_jaxprs(param):
-    import jax.core as jcore
-
-    if isinstance(param, jcore.ClosedJaxpr):
-        yield param.jaxpr
-    elif isinstance(param, jcore.Jaxpr):
-        yield param
-    elif isinstance(param, (tuple, list)):
-        for p in param:
-            yield from _sub_jaxprs(p)
-
-
-def _primitive_names(jaxpr, skip=("pallas_call",)):
-    names = set()
-    for eqn in jaxpr.eqns:
-        names.add(eqn.primitive.name)
-        if eqn.primitive.name in skip:
-            continue
-        for param in eqn.params.values():
-            for sub in _sub_jaxprs(param):
-                names |= _primitive_names(sub, skip)
-    return names
+from tools.reprolint import dynamic as rl_dynamic  # noqa: E402
 
 
 def test_packed_fused_while_body_has_no_pack_or_unpack():
@@ -308,46 +276,26 @@ def test_packed_fused_while_body_has_no_pack_or_unpack():
     accelerators serve): chi is uint32 words through the entire
     lax.while_loop — the body jaxpr contains none of the primitives pack
     (shift_left + reduce_sum) or unpack (shift_right + 32-lane broadcast)
-    lower to, and the loop carry holds no boolean chi.  The CPU ``words``
-    lowering is exempt by construction: it extracts frontier bits with jnp
-    shifts inside the body (DESIGN.md Sect. 9, "Lowerings")."""
-    import jax
-
+    lower to, no bool [V, n] plane is materialized, and the loop carry
+    holds no boolean chi.  The CPU ``words`` lowering is exempt by
+    construction: it extracts frontier bits with jnp shifts inside the
+    body (DESIGN.md Sect. 9, "Lowerings")."""
     db = synth.random_graph(70, 2, 200, seed=3)  # 70 % 32 != 0
     pat = synth.random_pattern(3, 2, 3, seed=3)
     c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
     ops = dualsim.make_packed_operands(c, db)
-    jaxpr = jax.make_jaxpr(
-        lambda o: dualsim.solve_packed_fused(o, impl="interpret")
-    )(ops)
-    whiles = _collect_while_eqns(jaxpr.jaxpr, [])
-    assert whiles, "fused solver lost its while_loop"
-    forbidden = {
-        "reduce_sum",  # the sum step of bitops.pack
-        "shift_left",  # pack's per-bit shifts
-        "shift_right_logical",  # unpack's per-bit shifts
-        "shift_right_arithmetic",
-    }
-    for eqn in whiles:
-        body = eqn.params["body_jaxpr"].jaxpr
-        used = _primitive_names(body)
-        assert not (used & forbidden), sorted(used & forbidden)
-        # the carried chi state is packed words, never a bool [V, n] plane
-        carried = [v.aval for v in body.outvars]
-        assert any(
-            a.dtype == jnp.uint32 and a.ndim == 2 for a in carried
-        ), carried
-        assert not any(
-            a.dtype == jnp.bool_ and a.ndim >= 2 for a in carried
-        ), carried
+    bodies = rl_dynamic._while_bodies(
+        lambda o: dualsim.solve_packed_fused(o, impl="interpret"), ops
+    )
+    assert bodies, "fused solver lost its while_loop"
+    for body in bodies:
+        assert rl_dynamic.check_fused_body(body) == []
 
 
 def test_packed_state_engines_carry_words_not_bools():
     """jacobi_packed / partitioned also iterate a packed uint32 chi state
     (their per-sweep y pack is data freshly produced by the segment reduce;
     chi itself never round-trips)."""
-    import jax
-
     db = synth.random_graph(48, 2, 120, seed=4)
     pat = synth.random_pattern(3, 2, 3, seed=4)
     c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
@@ -358,10 +306,12 @@ def test_packed_state_engines_carry_words_not_bools():
          dualsim.solve_partitioned),
     ]
     for ops, solve in cases:
-        jaxpr = jax.make_jaxpr(solve)(ops)
-        whiles = _collect_while_eqns(jaxpr.jaxpr, [])
-        assert whiles
-        for eqn in whiles:
-            carried = [v.aval for v in eqn.params["body_jaxpr"].jaxpr.outvars]
-            assert any(a.dtype == jnp.uint32 and a.ndim == 2 for a in carried)
-            assert not any(a.dtype == jnp.bool_ and a.ndim >= 2 for a in carried)
+        bodies = rl_dynamic._while_bodies(solve, ops)
+        assert bodies
+        for body in bodies:
+            assert rl_dynamic.check_carried_state(body) == []
+
+
+def test_dynamic_cross_check_runs_clean():
+    """The standalone CI cross-check (all packed engines) reports clean."""
+    assert rl_dynamic.check_packed_engines() == []

@@ -1,0 +1,199 @@
+"""Selftests for the reprolint static-analysis suite (tools/reprolint).
+
+Three families, mirroring the contract in DESIGN.md Sect. 11:
+
+* **fire-on-bad** — each rule RL1-RL4 produces its documented findings on
+  the deliberately-dirty fixture in ``tools/reprolint/selftest/``;
+* **silent-on-good** — the corrected twin of each fixture produces none;
+* **silent-on-frozen-clean** — ``clean_snapshot.py`` (a frozen copy of the
+  annotated ``serve/metrics.py``) stays clean, canarying checker false
+  positives introduced by later checker edits.
+
+Plus framework-level tests: suppression markers, baseline fingerprints,
+directory exclusion, and the CLI's exit-code contract.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from tools.reprolint import Finding, run_paths  # noqa: E402
+from tools.reprolint.core import check_file  # noqa: E402
+
+REPO = Path(__file__).resolve().parent.parent
+SELFTEST = REPO / "tools" / "reprolint" / "selftest"
+
+
+def lint(path: Path) -> list[Finding]:
+    new, _ = run_paths([path], root=REPO)
+    return new
+
+
+def rule_ids(findings: list[Finding]) -> set[str]:
+    return {f.rule_id for f in findings}
+
+
+# --------------------------------------------------------------------- #
+# fire-on-bad
+# --------------------------------------------------------------------- #
+def test_rl1_fires_on_bad_fixture():
+    findings = lint(SELFTEST / "rl1_bad.py")
+    assert rule_ids(findings) == {"RL1"}
+    messages = " | ".join(f.message for f in findings)
+    # every RL1 sub-rule is represented in the fixture
+    assert "module-level" in messages          # jnp constant at import time
+    assert "unhashable" in messages            # mutable static-arg default
+    assert "branches on a traced value" in messages
+    assert "host sync" in messages             # int()/np.asarray/.item()/float()
+    assert len(findings) == 7
+
+
+def test_rl2_fires_on_bad_fixture():
+    findings = lint(SELFTEST / "rl2_bad.py")
+    assert rule_ids(findings) == {"RL2"}
+    messages = " | ".join(f.message for f in findings)
+    assert "complement" in messages            # raw ~chi without ones_mask
+    assert "reduction" in messages             # jnp.sum on packed words
+    assert "OR with all-ones" in messages
+    assert len(findings) == 4
+
+
+def test_rl3_fires_on_bad_fixture():
+    findings = lint(SELFTEST / "rl3_bad.py")
+    assert rule_ids(findings) == {"RL3"}
+    messages = " | ".join(f.message for f in findings)
+    assert "accessed outside" in messages      # guarded field, no lock held
+    assert "lock-order inversion" in messages
+    assert "await while holding" in messages
+    assert len(findings) == 3
+
+
+def test_rl4_fires_on_bad_fixture():
+    findings = lint(SELFTEST / "rl4_bad.py")
+    assert rule_ids(findings) == {"RL4"}
+    messages = " | ".join(f.message for f in findings)
+    assert "unresolved at return" in messages
+    assert "resolved twice" in messages
+    assert "loop iteration end" in messages
+    assert len(findings) == 3
+
+
+# --------------------------------------------------------------------- #
+# silent-on-good
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("rule", ["rl1", "rl2", "rl3", "rl4"])
+def test_good_fixture_is_silent(rule):
+    assert lint(SELFTEST / f"{rule}_good.py") == []
+
+
+def test_frozen_clean_snapshot_stays_clean():
+    # clean_snapshot.py is a frozen copy of the annotated serve/metrics.py;
+    # a finding here means a checker edit introduced a false positive.
+    assert lint(SELFTEST / "clean_snapshot.py") == []
+
+
+# --------------------------------------------------------------------- #
+# framework behavior
+# --------------------------------------------------------------------- #
+def test_selftest_dir_excluded_from_directory_scans():
+    # scanning the tools/ *directory* must skip the deliberately-dirty
+    # fixtures (they are reachable only as direct file arguments)
+    new, old = run_paths([REPO / "tools"], root=REPO)
+    assert new == [] and old == []
+
+
+def test_line_suppression_and_escape_hatch(tmp_path):
+    dirty = (
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return int(x)\n"
+    )
+    f = tmp_path / "dirty.py"
+    f.write_text(dirty)
+    assert rule_ids(lint(f)) == {"RL1"}
+
+    f.write_text(dirty.replace(
+        "return int(x)", "return int(x)  # trace-ok: concretized by caller"
+    ))
+    assert lint(f) == []
+
+    f.write_text(dirty.replace(
+        "return int(x)", "return int(x)  # reprolint: disable=RL1"
+    ))
+    assert lint(f) == []
+
+
+def test_block_suppression_on_def_header(tmp_path):
+    f = tmp_path / "dirty.py"
+    f.write_text(
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):  # reprolint: disable=RL1\n"
+        "    if x:\n"
+        "        return int(x)\n"
+        "    return x\n"
+    )
+    assert lint(f) == []
+
+
+def test_baseline_moves_findings_out_of_new():
+    bad = SELFTEST / "rl4_bad.py"
+    lines = bad.read_text().splitlines()
+    fresh = lint(bad)
+    assert fresh
+    fingerprints = {f.fingerprint(lines[f.line - 1]) for f in fresh}
+    new, old = run_paths([bad], root=REPO, baseline=fingerprints)
+    assert new == []
+    assert len(old) == len(fresh)
+
+
+def test_fingerprint_ignores_line_number():
+    a = Finding("x.py", 10, "RL1", "msg")
+    b = Finding("x.py", 99, "RL1", "msg")
+    assert a.fingerprint("  foo()") == b.fingerprint("foo()")
+    assert a.fingerprint("foo()") != a.fingerprint("bar()")
+
+
+def test_syntax_error_reported_not_crashed(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def f(:\n")
+    findings = check_file(f, root=tmp_path)
+    assert [f.rule_id for f in findings] == ["RL0"]
+
+
+# --------------------------------------------------------------------- #
+# CLI contract
+# --------------------------------------------------------------------- #
+def _cli(*args: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", *args],
+        capture_output=True, text=True, cwd=REPO,
+    )
+
+
+def test_cli_exit_zero_on_merged_tree():
+    # the acceptance gate: the merged tree is clean with an empty baseline
+    proc = _cli("src", "tests", "benchmarks", "tools")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exit_one_and_json_artifact_on_findings(tmp_path):
+    artifact = tmp_path / "findings.json"
+    proc = _cli(str(SELFTEST / "rl2_bad.py"), "--json", str(artifact))
+    assert proc.returncode == 1
+    assert "RL2" in proc.stdout
+    data = json.loads(artifact.read_text())
+    assert data["baselined"] == []
+    assert {f["rule_id"] for f in data["new"]} == {"RL2"}
+    assert all({"file", "line", "rule_id", "message"} <= set(f) for f in data["new"])
+
+
+def test_cli_rules_filter():
+    proc = _cli(str(SELFTEST / "rl1_bad.py"), "--rules", "RL3,RL4")
+    assert proc.returncode == 0, proc.stdout + proc.stderr

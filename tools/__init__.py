@@ -1,0 +1,1 @@
+"""Repo tooling: docs gate (``check_docs``) and static analysis (``reprolint``)."""

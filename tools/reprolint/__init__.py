@@ -1,0 +1,78 @@
+"""reprolint — repo-native static analysis for the dual-simulation engine.
+
+The paper's soundness guarantee (a gfp overapproximation of SPARQL answers)
+survives in this codebase only because of invariants that no general-purpose
+linter knows about: JAX trace safety inside jitted fixpoints, the pad-bit
+masking rule for bit-packed ``uint32`` words, lock discipline around the
+threaded serving stack, and the "every submitted request resolves to exactly
+one outcome" futures contract.  reprolint mechanizes those rules as small
+stdlib-``ast`` checkers and gates CI on them (DESIGN.md Sect. 11 has the full
+rule catalog with the bug that motivated each rule).
+
+Rules
+-----
+* **RL1 trace-safety** — inside ``@jax.jit``-reachable functions and
+  ``lax.while_loop`` / ``lax.scan`` bodies: no host syncs
+  (``bool()/int()/float()/.item()/np.asarray`` on traced values), no Python
+  branching on traced parameters, no module-level ``jnp`` array constants
+  (they initialize the backend before ``XLA_FLAGS`` is read), no unhashable
+  values for declared-static jit arguments.
+* **RL2 pad-bit hygiene** — outside ``core/bitops.py`` and ``kernels/``,
+  raw bitwise complements and reductions on packed ``uint32 [V, nw]`` arrays
+  must apply the pad mask (``bitops.ones_mask``) or go through the sanctioned
+  ``bitops`` helpers.  "Packed" is a lightweight taint inferred from
+  ``pack`` / ``pack_np`` / ``.init_packed`` / ``.adj_packed`` call sites.
+* **RL3 lock discipline** — see the ``# guarded-by:`` convention below.
+* **RL4 exactly-once futures** — every path through a function that creates
+  (or is annotated as owning) a future/request object must resolve it exactly
+  once: one of ``set_result`` / ``set_exception`` / ``_resolve`` / ``_reject``
+  / ``cancel``, or an explicit hand-off (passing it to a call, storing it in
+  a container, or returning it).
+
+CONTRIBUTING — annotation conventions
+-------------------------------------
+``# guarded-by: <lock>``
+    Placed on (or on the line above) a ``self.<field> = ...`` assignment in
+    ``__init__``.  Declares that every later read or write of that field must
+    happen inside a lexical ``with self.<lock>:`` block in the same class.
+    ``<lock>`` is the attribute name of the lock (e.g. ``_lock``,
+    ``_route_lock``, ``cv``).  A *dotted* lock path (e.g.
+    ``guarded-by: self._route_lock`` on a ``Replica`` gauge) is matched
+    verbatim against the accessor's held with-items — for fields whose lock
+    lives on the accessing object rather than the receiver.  RL3 enforces
+    the declaration; it also flags ``await`` while any registered lock is
+    held, and acquisition orders that invert between two functions.
+
+``# requires-lock: <lock>``
+    Function-level annotation (on the ``def`` line or the line above): the
+    body is only ever entered with ``<lock>`` already held, so guarded-field
+    accesses inside it are legal.  Used for private helpers like
+    ``GraphDB._commit`` that are documented as "caller holds the lock".
+
+``# rl4: track=<var>``
+    Opt a variable into RL4 tracking in functions where creation is not
+    syntactically visible (e.g. the request object arrives as a parameter).
+
+Suppressions (use sparingly; every suppression needs a reason)
+--------------------------------------------------------------
+``# reprolint: disable=RL1``   silence any rule on this line (or a whole
+                               ``def``/``class`` when placed on its header)
+``# trace-ok: <reason>``       RL1 line-level escape hatch
+``# packed-ok: <reason>``      RL2 line-level escape hatch
+``# lock-ok: <reason>``        RL3 line-level escape hatch
+``# future-ok: <reason>``      RL4 line-level escape hatch
+
+Baseline: ``tools/reprolint/baseline.json`` holds fingerprints of findings
+grandfathered during a migration.  Policy: the baseline is **empty at merge**
+— new findings are fixed, not baselined.
+
+CLI::
+
+    python -m tools.reprolint src tests benchmarks
+
+Exit status is non-zero iff any non-baselined finding remains.
+"""
+
+from tools.reprolint.core import Checker, Context, Finding, run_paths
+
+__all__ = ["Checker", "Context", "Finding", "run_paths"]

@@ -1,0 +1,79 @@
+"""CLI entry point: ``python -m tools.reprolint src tests benchmarks``.
+
+Prints findings as ``file:line: RULE message``, optionally dumps them as a
+JSON artifact for CI, and exits non-zero iff any non-baselined finding
+remains.  The baseline (``tools/reprolint/baseline.json``) is a migration
+aid only — repo policy is an empty baseline at merge.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.reprolint.checkers import ALL_CHECKERS
+from tools.reprolint.core import load_baseline, run_paths
+
+REPO_ROOT = Path(__file__).resolve().parent.parent.parent
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="Repo-native static analysis (RL1 trace-safety, RL2 pad-bit "
+        "hygiene, RL3 lock discipline, RL4 exactly-once futures).",
+    )
+    parser.add_argument("paths", nargs="*", default=["src"], help="files or directories")
+    parser.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    parser.add_argument("--json", type=Path, default=None, help="write findings JSON here")
+    parser.add_argument("--rules", default=None, help="comma-separated rule subset, e.g. RL1,RL3")
+    args = parser.parse_args(argv)
+
+    checkers = [cls() for cls in ALL_CHECKERS]
+    if args.rules:
+        wanted = {r.strip().upper() for r in args.rules.split(",")}
+        checkers = [c for c in checkers if c.rule_id in wanted]
+
+    baseline = load_baseline(args.baseline)
+    new, old = run_paths(args.paths or ["src"], root=REPO_ROOT, baseline=baseline, checkers=checkers)
+
+    for finding in new:
+        print(finding.render())
+    if old:
+        print(f"[reprolint] {len(old)} baselined finding(s) suppressed", file=sys.stderr)
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(
+            json.dumps(
+                {
+                    "new": [dataclass_dict(f) for f in new],
+                    "baselined": [dataclass_dict(f) for f in old],
+                },
+                indent=2,
+            )
+            + "\n"
+        )
+
+    if new:
+        print(f"[reprolint] {len(new)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"[reprolint] clean ({len(checkers)} checkers)", file=sys.stderr)
+    return 0
+
+
+def dataclass_dict(finding) -> dict:
+    """JSON-friendly view of a Finding."""
+    return {
+        "file": finding.file,
+        "line": finding.line,
+        "rule_id": finding.rule_id,
+        "message": finding.message,
+    }
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""Checker registry: the four repo-native rule families (RL1–RL4)."""
+
+from tools.reprolint.checkers.rl1_trace import TraceSafetyChecker
+from tools.reprolint.checkers.rl2_padbits import PadBitChecker
+from tools.reprolint.checkers.rl3_locks import LockDisciplineChecker
+from tools.reprolint.checkers.rl4_futures import ExactlyOnceFutureChecker
+
+ALL_CHECKERS = [
+    TraceSafetyChecker,
+    PadBitChecker,
+    LockDisciplineChecker,
+    ExactlyOnceFutureChecker,
+]
+
+__all__ = [
+    "ALL_CHECKERS",
+    "TraceSafetyChecker",
+    "PadBitChecker",
+    "LockDisciplineChecker",
+    "ExactlyOnceFutureChecker",
+]

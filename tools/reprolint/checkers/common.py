@@ -1,0 +1,119 @@
+"""Shared AST helpers for reprolint checkers."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def dotted(node: ast.AST) -> str:
+    """Render a Name/Attribute chain as ``a.b.c`` ('' if not a plain chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    if isinstance(node, ast.Call):
+        # e.g. ``jax.jit(f)(x)`` — render the callee chain.
+        inner = dotted(node.func)
+        return f"{inner}()" if inner else ""
+    return ""
+
+
+def names_in(node: ast.AST) -> set[str]:
+    """All Name identifiers loaded anywhere inside ``node``."""
+    return {
+        n.id
+        for n in ast.walk(node)
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+    }
+
+
+def param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def positional_params(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args]
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.FunctionDef | ast.AsyncFunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            yield node
+
+
+def enclosing_function_map(tree: ast.AST) -> dict[ast.AST, ast.AST | None]:
+    """Map each node to its nearest enclosing function def (None = module)."""
+    out: dict[ast.AST, ast.AST | None] = {}
+
+    def walk(node: ast.AST, fn: ast.AST | None) -> None:
+        out[node] = fn
+        inner = node if isinstance(node, FuncDef) else fn
+        for child in ast.iter_child_nodes(node):
+            walk(child, inner)
+
+    walk(tree, None)
+    return out
+
+
+def const_str_seq(node: ast.AST) -> list[str]:
+    """Extract a list of strings from a str constant or tuple/list of them."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return out
+    return []
+
+
+def const_int_seq(node: ast.AST) -> list[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, int)
+        ]
+    return []
+
+
+def contains_shield_attr(node: ast.AST) -> bool:
+    """True if the expression touches a static/trace-safe attribute.
+
+    ``.shape`` / ``.dtype`` / ``.ndim`` / ``.size`` are static at trace time,
+    and ``len()`` / ``isinstance()`` only apply to static structure.
+    """
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "dtype", "ndim", "size"):
+            return True
+        if isinstance(n, ast.Call):
+            callee = dotted(n.func)
+            if callee in ("len", "isinstance", "type", "hasattr"):
+                return True
+    return False
+
+
+def is_identity_compare(node: ast.AST) -> bool:
+    """True if the test is only ``is`` / ``is not`` comparisons (trace-safe)."""
+    comparisons = [n for n in ast.walk(node) if isinstance(n, ast.Compare)]
+    if not comparisons:
+        return False
+    return all(
+        all(isinstance(op, (ast.Is, ast.IsNot)) for op in c.ops) for c in comparisons
+    )

@@ -1,0 +1,370 @@
+"""RL1 — trace safety inside jit-reachable code.
+
+Protects the zero-retrace / no-host-sync contract of the fixpoint engines
+(DESIGN.md Sect. 11): inside a ``@jax.jit``-reachable function or a
+``lax.while_loop`` / ``lax.scan`` body, a ``bool()/int()/float()/.item()``
+or ``np.asarray`` on a traced value blocks on device transfer (or raises a
+``TracerError``), and Python ``if``/``while`` on a tracer is a concretization
+error.  Also flags module-level ``jnp`` constants (they initialize the JAX
+backend at import time, before ``XLA_FLAGS`` can be set — the exact bug PR 5
+fixed in ``core/dualsim.py``) and unhashable values bound to declared-static
+jit arguments (every call retraces or raises).
+
+Reachability is module-local: jit entry points are found from decorators
+(``@jax.jit``, ``@functools.partial(jax.jit, static_argnames=...)``),
+``jax.jit(f)`` call sites, and functions passed to ``lax.while_loop`` /
+``lax.scan`` / ``lax.cond`` / ``lax.fori_loop``; the traced/static split of
+each parameter follows ``static_argnames``/``static_argnums`` and, for plain
+helpers, whether any call site passes a traced expression.
+
+Escape hatch: ``# trace-ok: <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable, Iterator
+
+from tools.reprolint.checkers.common import (
+    FuncDef,
+    const_int_seq,
+    const_str_seq,
+    contains_shield_attr,
+    dotted,
+    enclosing_function_map,
+    is_identity_compare,
+    names_in,
+    param_names,
+    positional_params,
+)
+from tools.reprolint.core import Checker, Context, Finding
+
+JIT_CALLEES = {"jax.jit", "jit", "functools.partial", "partial"}
+HOST_CASTS = {"bool", "int", "float", "complex"}
+NP_SYNC_CALLS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "onp.asarray", "onp.array",
+}
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)
+
+# callee -> indices of function-valued arguments whose bodies are trace regions
+STAGED_CALLEES = {
+    "lax.while_loop": (0, 1),
+    "jax.lax.while_loop": (0, 1),
+    "lax.scan": (0,),
+    "jax.lax.scan": (0,),
+    "lax.cond": (1, 2),
+    "jax.lax.cond": (1, 2),
+    "lax.fori_loop": (2,),
+    "jax.lax.fori_loop": (2,),
+    "lax.switch": (1,),
+    "jax.lax.switch": (1,),
+}
+
+
+@dataclasses.dataclass
+class _FnInfo:
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    static: set[str] = dataclasses.field(default_factory=set)
+    traced: set[str] = dataclasses.field(default_factory=set)
+    reached: bool = False
+    is_jit_entry: bool = False
+
+
+def _walk_skip_nested(stmts: Iterable[ast.stmt]) -> Iterator[ast.AST]:
+    """Walk statements without descending into nested function/class defs."""
+    stack: list[ast.AST] = list(stmts)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, FuncDef + (ast.ClassDef,)):
+                continue
+            stack.append(child)
+
+
+class TraceSafetyChecker(Checker):
+    """RL1: host syncs, tracer branching, early backend init, retrace hazards."""
+
+    rule_id = "RL1"
+    title = "trace safety in jit-reachable code"
+
+    def visit(self, ctx: Context) -> Iterable[Finding]:
+        fns: dict[str, _FnInfo] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, FuncDef):
+                fns[node.name] = _FnInfo(node)
+
+        self._mark_decorated_entries(fns)
+        lambda_regions = self._mark_callsite_entries(ctx.tree, fns)
+        self._propagate_reachability(fns)
+
+        findings: list[Finding] = []
+        for info in fns.values():
+            if info.reached:
+                findings.extend(self._check_region(ctx, info.node.body, info.traced))
+        for lam, traced in lambda_regions:
+            findings.extend(self._check_expr_region(ctx, lam.body, traced))
+        findings.extend(self._check_module_constants(ctx))
+        findings.extend(self._check_static_hashability(ctx, fns))
+        return findings
+
+    # -- entry discovery ---------------------------------------------------
+
+    def _mark_decorated_entries(self, fns: dict[str, _FnInfo]) -> None:
+        for info in fns.values():
+            for dec in info.node.decorator_list:
+                static = self._jit_static_params(dec, info.node)
+                if static is not None:
+                    info.is_jit_entry = True
+                    info.static |= static
+
+    def _jit_static_params(self, expr: ast.AST, fn) -> set[str] | None:
+        """If ``expr`` is a jit wrapper, return its static param names."""
+        name = dotted(expr)
+        if name in ("jax.jit", "jit"):
+            return set()
+        if not isinstance(expr, ast.Call):
+            return None
+        callee = dotted(expr.func)
+        wraps_jit = callee in ("jax.jit", "jit") or (
+            callee in ("functools.partial", "partial")
+            and expr.args
+            and dotted(expr.args[0]) in ("jax.jit", "jit")
+        )
+        if not wraps_jit:
+            return None
+        static: set[str] = set()
+        pos = positional_params(fn)
+        for kw in expr.keywords:
+            if kw.arg == "static_argnames":
+                static |= set(const_str_seq(kw.value))
+            elif kw.arg == "static_argnums":
+                for i in const_int_seq(kw.value):
+                    if 0 <= i < len(pos):
+                        static.add(pos[i])
+        return static
+
+    def _mark_callsite_entries(self, tree, fns):
+        """``jax.jit(f)`` call sites and staged-callee (while/scan) bodies."""
+        lambda_regions: list[tuple[ast.Lambda, set[str]]] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted(node.func)
+            if callee in ("jax.jit", "jit") and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name) and target.id in fns:
+                    info = fns[target.id]
+                    info.is_jit_entry = True
+                    pos = positional_params(info.node)
+                    for kw in node.keywords:
+                        if kw.arg == "static_argnames":
+                            info.static |= set(const_str_seq(kw.value))
+                        elif kw.arg == "static_argnums":
+                            for i in const_int_seq(kw.value):
+                                if 0 <= i < len(pos):
+                                    info.static.add(pos[i])
+            if callee in STAGED_CALLEES:
+                for idx in STAGED_CALLEES[callee]:
+                    if idx >= len(node.args):
+                        continue
+                    arg = node.args[idx]
+                    if isinstance(arg, ast.Name) and arg.id in fns:
+                        info = fns[arg.id]
+                        info.is_jit_entry = True  # loop bodies: all params traced
+                    elif isinstance(arg, ast.Lambda):
+                        lambda_regions.append((arg, set(param_names(arg))))
+        return lambda_regions
+
+    def _propagate_reachability(self, fns: dict[str, _FnInfo]) -> None:
+        for info in fns.values():
+            if info.is_jit_entry:
+                info.reached = True
+                info.traced = {
+                    p for p in param_names(info.node) if p not in info.static and p != "self"
+                }
+        # Worklist: a call from a reached function marks the callee reached,
+        # with callee params traced iff some call site passes a traced expr.
+        changed = True
+        while changed:
+            changed = False
+            for info in fns.values():
+                if not info.reached:
+                    continue
+                for node in _walk_skip_nested(info.node.body):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    callee = dotted(node.func)
+                    target = fns.get(callee) or fns.get(callee.rpartition(".")[2])
+                    if target is None or target is info:
+                        continue
+                    traced_params = self._callsite_traced_params(node, target, info.traced)
+                    if not target.reached or traced_params - target.traced:
+                        target.reached = True
+                        target.traced |= traced_params
+                        changed = True
+
+    def _callsite_traced_params(self, call: ast.Call, target: _FnInfo, caller_traced):
+        pos = [p for p in positional_params(target.node) if p != "self"]
+        traced: set[str] = set()
+        for i, arg in enumerate(call.args):
+            if i < len(pos) and self._is_traced_expr(arg, caller_traced):
+                traced.add(pos[i])
+        for kw in call.keywords:
+            if kw.arg and self._is_traced_expr(kw.value, caller_traced):
+                traced.add(kw.arg)
+        return traced
+
+    @staticmethod
+    def _is_traced_expr(expr: ast.AST, traced: set[str]) -> bool:
+        if isinstance(expr, ast.Constant):
+            return False
+        if contains_shield_attr(expr):
+            return False
+        return bool(names_in(expr) & traced)
+
+    # -- region checks -----------------------------------------------------
+
+    def _check_region(self, ctx, stmts, traced_params: set[str]) -> list[Finding]:
+        findings: list[Finding] = []
+        traced = set(traced_params)
+        for node in _walk_skip_nested(stmts):
+            # Flow-insensitive taint: anything assigned from a traced
+            # expression is itself traced (one pass is enough in practice).
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = node.value
+                if value is not None and self._is_traced_expr(value, traced):
+                    targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                traced.add(n.id)
+        for node in _walk_skip_nested(stmts):
+            findings.extend(self._check_node(ctx, node, traced))
+        return findings
+
+    def _check_expr_region(self, ctx, expr: ast.AST, traced: set[str]) -> list[Finding]:
+        return [f for node in ast.walk(expr) for f in self._check_node(ctx, node, traced)]
+
+    def _check_node(self, ctx, node: ast.AST, traced: set[str]) -> list[Finding]:
+        out: list[Finding] = []
+        if isinstance(node, ast.Call):
+            callee = dotted(node.func)
+            if callee in HOST_CASTS and node.args:
+                if self._is_traced_expr(node.args[0], traced):
+                    out.append(self.finding(
+                        ctx, node,
+                        f"host sync: `{callee}()` on a traced value inside a "
+                        f"jit-reachable region (blocks on device transfer or "
+                        f"raises TracerError)",
+                    ))
+            elif callee in NP_SYNC_CALLS and node.args:
+                if self._is_traced_expr(node.args[0], traced):
+                    out.append(self.finding(
+                        ctx, node,
+                        f"host sync: `{callee}` on a traced value inside a "
+                        f"jit-reachable region; use `jnp.asarray` or keep the "
+                        f"value on device",
+                    ))
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+                and self._is_traced_expr(node.func.value, traced)
+            ):
+                out.append(self.finding(
+                    ctx, node,
+                    "host sync: `.item()` on a traced value inside a "
+                    "jit-reachable region",
+                ))
+        elif isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            test = node.test
+            if (
+                self._is_traced_expr(test, traced)
+                and not is_identity_compare(test)
+            ):
+                kind = "while" if isinstance(node, ast.While) else "if"
+                out.append(self.finding(
+                    ctx, node,
+                    f"Python `{kind}` branches on a traced value inside a "
+                    f"jit-reachable region; use `lax.cond`/`jnp.where` or make "
+                    f"the argument static",
+                ))
+        elif isinstance(node, ast.Assert):
+            if self._is_traced_expr(node.test, traced):
+                out.append(self.finding(
+                    ctx, node,
+                    "assert on a traced value inside a jit-reachable region "
+                    "(host sync); use checkify or assert on static structure",
+                ))
+        return out
+
+    # -- module-scope checks -----------------------------------------------
+
+    def _check_module_constants(self, ctx) -> list[Finding]:
+        findings = []
+        enclosing = enclosing_function_map(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or enclosing.get(node) is not None:
+                continue
+            callee = dotted(node.func)
+            if callee.startswith("jnp.") or callee.startswith("jax.numpy."):
+                findings.append(self.finding(
+                    ctx, node,
+                    f"module-level `{callee}(...)` constant initializes the JAX "
+                    f"backend at import time, before `XLA_FLAGS` is read; build "
+                    f"it with numpy or inside a function",
+                ))
+        return findings
+
+    def _check_static_hashability(self, ctx, fns: dict[str, _FnInfo]) -> list[Finding]:
+        findings = []
+        for info in fns.values():
+            if not info.static:
+                continue
+            a = info.node.args
+            pos = a.posonlyargs + a.args
+            for param, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+                if param.arg in info.static and isinstance(default, MUTABLE_LITERALS):
+                    findings.append(self.finding(
+                        ctx, default,
+                        f"unhashable default for static jit arg `{param.arg}` "
+                        f"(retraces or raises on every call); use a tuple or "
+                        f"frozen value",
+                    ))
+            for param, default in zip(a.kwonlyargs, a.kw_defaults):
+                if (
+                    default is not None
+                    and param.arg in info.static
+                    and isinstance(default, MUTABLE_LITERALS)
+                ):
+                    findings.append(self.finding(
+                        ctx, default,
+                        f"unhashable default for static jit arg `{param.arg}`; "
+                        f"use a tuple or frozen value",
+                    ))
+        # Call sites passing mutable literals to declared-static params.
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted(node.func)
+            target = fns.get(callee) or fns.get(callee.rpartition(".")[2])
+            if target is None or not target.static:
+                continue
+            pos = [p for p in positional_params(target.node) if p != "self"]
+            for i, arg in enumerate(node.args):
+                if i < len(pos) and pos[i] in target.static and isinstance(arg, MUTABLE_LITERALS):
+                    findings.append(self.finding(
+                        ctx, arg,
+                        f"unhashable value for static jit arg `{pos[i]}` of "
+                        f"`{target.node.name}` (retraces or raises); pass a tuple",
+                    ))
+            for kw in node.keywords:
+                if kw.arg in target.static and isinstance(kw.value, MUTABLE_LITERALS):
+                    findings.append(self.finding(
+                        ctx, kw.value,
+                        f"unhashable value for static jit arg `{kw.arg}` of "
+                        f"`{target.node.name}` (retraces or raises); pass a tuple",
+                    ))
+        return findings

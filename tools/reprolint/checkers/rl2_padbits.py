@@ -1,0 +1,230 @@
+"""RL2 — pad-bit hygiene for packed ``uint32 [V, nw]`` arrays.
+
+The packed chi representation (DESIGN.md Sect. 9) keeps the trailing pad
+bits of the last word **zero**.  AND-only dataflow preserves that invariant;
+a raw complement (``~w`` / ``jnp.bitwise_not``) or an OR with all-ones turns
+the pad bits on, and any later popcount/reduction silently counts phantom
+query nodes — the class of bug the ``bitops.ones_mask`` discipline exists to
+prevent.  Outside the sanctioned homes (``core/bitops.py`` and ``kernels/``,
+which implement the masking), this checker flags:
+
+* complements of packed values whose result is not immediately AND-masked,
+* raw reductions (``jnp.sum`` / ``.sum()`` / ``lax.population_count`` /
+  ``count_nonzero``) on packed values — use ``bitops.popcount`` /
+  ``bitops.any_set``, which are pad-aware,
+* OR-ing a packed value with an all-ones constant.
+
+"Packed" is a lightweight per-function taint seeded at ``pack`` /
+``pack_np`` / ``.init_packed`` / ``.adj_packed`` call sites and cleared by
+``unpack`` / ``popcount`` / ``any_set`` (their results are not word arrays).
+
+Escape hatch: ``# packed-ok: <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.reprolint.checkers.common import FuncDef, dotted
+from tools.reprolint.core import Checker, Context, Finding
+
+EXEMPT_PATH_PARTS = ("core/bitops.py", "kernels/")
+
+TAINT_CALL_SUFFIXES = ("pack", "pack_np")
+TAINT_ATTRS = ("init_packed", "adj_packed", "chi_packed")
+# Calls whose result leaves the packed-word domain (taint sinks).
+CLEARING_SUFFIXES = ("unpack", "unpack_np", "popcount", "any_set", "leq")
+
+COMPLEMENT_CALLS = {
+    "jnp.bitwise_not", "jnp.invert", "jax.numpy.bitwise_not", "jax.numpy.invert",
+    "np.bitwise_not", "np.invert",
+}
+REDUCTION_CALLS = {
+    "jnp.sum", "np.sum", "jnp.count_nonzero", "np.count_nonzero",
+    "lax.population_count", "jax.lax.population_count",
+}
+ALL_ONES_VALUES = {0xFFFFFFFF}
+
+
+def _callee_suffix(call: ast.Call) -> str:
+    return dotted(call.func).rpartition(".")[2]
+
+
+def _is_source(node: ast.AST) -> bool:
+    if isinstance(node, ast.Call) and _callee_suffix(node) in TAINT_CALL_SUFFIXES:
+        return True
+    if isinstance(node, ast.Attribute) and node.attr in TAINT_ATTRS:
+        return True
+    return False
+
+
+def _is_clearing_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and _callee_suffix(node) in CLEARING_SUFFIXES
+
+
+class PadBitChecker(Checker):
+    """RL2: unmasked bitwise ops / reductions on packed words outside bitops."""
+
+    rule_id = "RL2"
+    title = "pad-bit hygiene on packed words"
+
+    def visit(self, ctx: Context) -> Iterable[Finding]:
+        rel = ctx.rel.replace("\\", "/")
+        if any(part in rel for part in EXEMPT_PATH_PARTS):
+            return []
+        findings: list[Finding] = []
+        # Module level plus each function is its own taint scope.
+        scopes: list[list[ast.stmt]] = [ctx.tree.body]
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, FuncDef):
+                scopes.append(node.body)
+        for body in scopes:
+            findings.extend(self._check_scope(ctx, body))
+        return findings
+
+    # -- taint -------------------------------------------------------------
+
+    def _tainted_names(self, body: list[ast.stmt]) -> set[str]:
+        tainted: set[str] = set()
+        for _ in range(2):  # two passes handle simple forward chains
+            for node in self._walk_scope(body):
+                if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    value = node.value
+                    if value is None or _is_clearing_call(value):
+                        continue
+                    if self._expr_tainted(value, tainted):
+                        targets = (
+                            node.targets if isinstance(node, ast.Assign) else [node.target]
+                        )
+                        for t in targets:
+                            for n in ast.walk(t):
+                                if isinstance(n, ast.Name):
+                                    tainted.add(n.id)
+        return tainted
+
+    def _expr_tainted(self, expr: ast.AST, tainted: set[str]) -> bool:
+        for n in ast.walk(expr):
+            if _is_source(n):
+                return True
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) and n.id in tainted:
+                return True
+        return False
+
+    @staticmethod
+    def _walk_scope(body: list[ast.stmt]):
+        stack: list[ast.AST] = list(body)
+        while stack:
+            node = stack.pop()
+            yield node
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, FuncDef + (ast.ClassDef,)):
+                    continue
+                stack.append(child)
+
+    # -- checks ------------------------------------------------------------
+
+    def _check_scope(self, ctx: Context, body: list[ast.stmt]) -> list[Finding]:
+        tainted = self._tainted_names(body)
+        findings: list[Finding] = []
+        for stmt in self._statements(body):
+            parents = _parent_map(stmt)
+            stmt_uses_mask = any(
+                isinstance(n, (ast.Name, ast.Attribute))
+                and (getattr(n, "id", None) == "ones_mask" or getattr(n, "attr", None) == "ones_mask")
+                for n in ast.walk(stmt)
+            )
+            for node in ast.walk(stmt):
+                findings.extend(
+                    self._check_expr(ctx, node, tainted, parents, stmt_uses_mask)
+                )
+        return findings
+
+    @staticmethod
+    def _statements(body: list[ast.stmt]):
+        stack: list[ast.AST] = list(body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, FuncDef + (ast.ClassDef,)):
+                continue
+            if isinstance(node, ast.stmt):
+                yield node
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.stmt):
+                    stack.append(child)
+
+    def _check_expr(self, ctx, node, tainted, parents, stmt_uses_mask) -> list[Finding]:
+        out: list[Finding] = []
+        is_complement = (
+            isinstance(node, ast.UnaryOp)
+            and isinstance(node.op, ast.Invert)
+            and self._expr_tainted(node.operand, tainted)
+        ) or (
+            isinstance(node, ast.Call)
+            and dotted(node.func) in COMPLEMENT_CALLS
+            and node.args
+            and self._expr_tainted(node.args[0], tainted)
+        )
+        if is_complement:
+            if not stmt_uses_mask and not _under_bitand(node, parents):
+                out.append(self.finding(
+                    ctx, node,
+                    "complement of packed words turns the pad bits on; AND the "
+                    "result with `bitops.ones_mask(n)` (or use `bitops.bnot`)",
+                ))
+        if isinstance(node, ast.Call):
+            callee = dotted(node.func)
+            if callee in REDUCTION_CALLS and node.args and self._expr_tainted(
+                node.args[0], tainted
+            ):
+                out.append(self.finding(
+                    ctx, node,
+                    f"raw reduction `{callee}` on packed words counts pad bits "
+                    f"after any complement; use `bitops.popcount` / "
+                    f"`bitops.any_set`",
+                ))
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "sum"
+                and self._expr_tainted(node.func.value, tainted)
+            ):
+                out.append(self.finding(
+                    ctx, node,
+                    "raw `.sum()` on packed words; use `bitops.popcount` "
+                    "(pad-masked) instead",
+                ))
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+            for side, other in ((node.left, node.right), (node.right, node.left)):
+                if (
+                    self._expr_tainted(side, tainted)
+                    and isinstance(other, ast.Constant)
+                    and other.value in ALL_ONES_VALUES
+                ):
+                    out.append(self.finding(
+                        ctx, node,
+                        "OR with all-ones sets the pad bits of packed words; "
+                        "mask with `bitops.ones_mask(n)`",
+                    ))
+                    break
+        return out
+
+
+def _parent_map(root: ast.AST) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(root):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def _under_bitand(node: ast.AST, parents: dict[ast.AST, ast.AST]) -> bool:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, ast.BinOp) and isinstance(cur.op, ast.BitAnd):
+            return True
+        if isinstance(cur, ast.Call):
+            suffix = _callee_suffix(cur)
+            if suffix in ("band", "bitwise_and", "where"):
+                return True
+        cur = parents.get(cur)
+    return False

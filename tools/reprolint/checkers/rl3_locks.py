@@ -1,0 +1,240 @@
+"""RL3 — lock discipline via the ``# guarded-by:`` annotation registry.
+
+The serving stack (PR 6) is threaded: ``Engine`` counters, ``GraphDB``
+mutation state, ``Session`` pending maps, router replica stats, and serve
+metrics are all shared across threads and guarded by explicit locks.  The
+torn-``Engine``-metrics bug fixed in PR 6 is the motivating example — a
+reader walked counter fields without the lock while a writer updated them.
+
+Conventions (documented in ``tools/reprolint/__init__.py``):
+
+* ``# guarded-by: <lock>`` on a ``self.<field> = ...`` assignment registers
+  the field; every later access must sit inside a lexical
+  ``with <receiver>.<lock>:`` block (receiver-matched: ``self.X`` needs
+  ``with self.<lock>``, ``rep.X`` needs ``with rep.<lock>``).
+* ``# requires-lock: <lock>`` on a ``def`` marks a helper whose callers are
+  documented to hold the lock; its body is checked as if the lock were held.
+* ``await`` inside a *sync* ``with`` of a registered lock is flagged — a
+  threading lock held across a suspension point blocks the event loop.
+* Nested acquisition orders are collected per function (including one level
+  of same-module call expansion); an A→B order in one function and B→A in
+  another is flagged as a potential deadlock inversion.
+
+Escape hatch: ``# lock-ok: <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.reprolint.checkers.common import FuncDef, dotted
+from tools.reprolint.core import Checker, Context, Finding
+
+GUARDED_MARKER = "guarded-by:"
+REQUIRES_MARKER = "requires-lock:"
+LOCKISH_HINTS = ("lock", "cv", "mutex", "cond")
+
+EXEMPT_METHODS = {"__init__", "__del__"}
+
+
+def _lock_attr_of(expr: ast.AST, known_locks: set[str]) -> str | None:
+    """If a with-item context expr looks like a lock, return its dotted path."""
+    path = dotted(expr)
+    if not path:
+        return None
+    leaf = path.rpartition(".")[2]
+    if leaf in known_locks or any(h in leaf.lower() for h in LOCKISH_HINTS):
+        return path
+    return None
+
+
+class LockDisciplineChecker(Checker):
+    """RL3: guarded-field access, await-under-lock, lock-order inversions."""
+
+    rule_id = "RL3"
+    title = "lock discipline (# guarded-by registry)"
+
+    def visit(self, ctx: Context) -> Iterable[Finding]:
+        registry, lock_names = self._build_registry(ctx)
+        if not registry and GUARDED_MARKER not in ctx.source:
+            # No annotations in this file: only the order-inversion check
+            # could apply, and without a registry there is nothing to anchor.
+            return []
+        findings: list[Finding] = []
+        # field -> lock, only for fields unique module-wide (receiver-based
+        # checks on non-self objects need an unambiguous owner).
+        field_locks: dict[str, str] = {}
+        seen: dict[str, int] = {}
+        for fields in registry.values():
+            for f, lock in fields.items():
+                seen[f] = seen.get(f, 0) + 1
+                field_locks[f] = lock
+        unique_fields = {f: lk for f, lk in field_locks.items() if seen[f] == 1}
+
+        acquisitions: dict[str, set[str]] = {}  # function name -> locks acquired
+        order_edges: list[tuple[str, str, ast.AST, str]] = []
+
+        for cls in [n for n in ast.walk(ctx.tree) if isinstance(n, ast.ClassDef)]:
+            fields = registry.get(cls.name, {})
+            for meth in [n for n in cls.body if isinstance(n, FuncDef)]:
+                self._scan_function(
+                    ctx, meth, fields, unique_fields, lock_names,
+                    findings, acquisitions, order_edges,
+                )
+        for fn in [n for n in ctx.tree.body if isinstance(n, FuncDef)]:
+            self._scan_function(
+                ctx, fn, {}, unique_fields, lock_names,
+                findings, acquisitions, order_edges,
+            )
+
+        findings.extend(self._order_inversions(ctx, order_edges, acquisitions))
+        return findings
+
+    # -- registry ----------------------------------------------------------
+
+    def _build_registry(self, ctx: Context):
+        """Collect ``# guarded-by:`` annotations on ``self.X = ...`` lines."""
+        registry: dict[str, dict[str, str]] = {}
+        lock_names: set[str] = set()
+        for cls in [n for n in ast.walk(ctx.tree) if isinstance(n, ast.ClassDef)]:
+            fields: dict[str, str] = {}
+            for node in ast.walk(cls):
+                if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    continue
+                comment = ctx.comment_on_or_above(node.lineno)
+                if GUARDED_MARKER not in comment:
+                    continue
+                lock = comment.split(GUARDED_MARKER, 1)[1].split()[0].strip("`")
+                lock_names.add(lock.rpartition(".")[2])
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for t in targets:
+                    if (
+                        isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                    ):
+                        fields[t.attr] = lock
+                        lock_names.add(lock)
+            if fields:
+                registry[cls.name] = fields
+        return registry, lock_names
+
+    # -- per-function scan ---------------------------------------------------
+
+    def _requires_locks(self, ctx: Context, fn) -> set[str]:
+        held: set[str] = set()
+        comment = ctx.comment_on_or_above(fn.lineno)
+        if REQUIRES_MARKER in comment:
+            lock = comment.split(REQUIRES_MARKER, 1)[1].split()[0].strip("`")
+            held.add(f"self.{lock}")
+        return held
+
+    def _scan_function(
+        self, ctx, fn, fields, unique_fields, lock_names,
+        findings, acquisitions, order_edges,
+    ) -> None:
+        exempt = fn.name in EXEMPT_METHODS
+        base_held = self._requires_locks(ctx, fn)
+        acquired: set[str] = set()
+
+        def walk(node: ast.AST, held: tuple[str, ...], sync_held: tuple[str, ...]):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                new_locks = []
+                for item in node.items:
+                    path = _lock_attr_of(item.context_expr, lock_names)
+                    if path is not None:
+                        new_locks.append(path)
+                        acquired.add(path.rpartition(".")[2])
+                        for outer in held:
+                            order_edges.append(
+                                (outer.rpartition(".")[2], path.rpartition(".")[2],
+                                 item.context_expr, fn.name)
+                            )
+                inner_held = held + tuple(new_locks)
+                inner_sync = sync_held + (
+                    tuple(new_locks) if isinstance(node, ast.With) else ()
+                )
+                for child in node.body:
+                    walk(child, inner_held, inner_sync)
+                return
+            if isinstance(node, FuncDef + (ast.ClassDef,)) and node is not fn:
+                return
+            if isinstance(node, ast.Await) and sync_held:
+                findings.append(self.finding(
+                    ctx, node,
+                    f"await while holding {', '.join(f'`{h}`' for h in sync_held)} "
+                    f"(threading lock held across a suspension point stalls the "
+                    f"event loop)",
+                ))
+            if isinstance(node, ast.Call):
+                # One-level call expansion for the order graph: calling a
+                # same-module function that itself acquires locks while we
+                # hold one records an ordering edge.
+                callee_leaf = dotted(node.func).rpartition(".")[2]
+                if held and callee_leaf:
+                    for outer in held:
+                        order_edges.append(
+                            (outer.rpartition(".")[2], f"call:{callee_leaf}",
+                             node, fn.name)
+                        )
+            if isinstance(node, ast.Attribute) and not exempt:
+                self._check_field_access(
+                    ctx, node, fields, unique_fields, held, findings
+                )
+            for child in ast.iter_child_nodes(node):
+                walk(child, held, sync_held)
+
+        for stmt in fn.body:
+            walk(stmt, tuple(sorted(base_held)), tuple(sorted(base_held)))
+        acquisitions[fn.name] = acquired
+
+    def _check_field_access(self, ctx, node, fields, unique_fields, held, findings):
+        recv = dotted(node.value)
+        field = node.attr
+        if recv == "self" and field in fields:
+            lock = fields[field]
+        elif recv and recv != "self" and field in unique_fields:
+            lock = unique_fields[field]
+        else:
+            return
+        # A dotted lock path (e.g. `self._route_lock` on a Replica gauge) is
+        # matched verbatim against the held with-items: the lock lives on the
+        # accessor, not on the receiver object.
+        required = lock if "." in lock else f"{recv}.{lock}"
+        if required in held:
+            return
+        findings.append(self.finding(
+            ctx, node,
+            f"`{recv}.{field}` is guarded-by `{lock}` but accessed outside "
+            f"`with {required}:`",
+        ))
+
+    # -- lock-order inversions ----------------------------------------------
+
+    def _order_inversions(self, ctx, order_edges, acquisitions) -> list[Finding]:
+        # Expand call edges one level: (A, call:m) becomes (A, B) for each
+        # lock B acquired directly in m.
+        expanded: dict[tuple[str, str], tuple[ast.AST, str]] = {}
+        for outer, inner, node, fn_name in order_edges:
+            if inner.startswith("call:"):
+                callee = inner[len("call:"):]
+                for lock in acquisitions.get(callee, ()):
+                    if lock != outer:
+                        expanded.setdefault((outer, lock), (node, fn_name))
+            else:
+                if inner != outer:
+                    expanded.setdefault((outer, inner), (node, fn_name))
+        findings = []
+        reported: set[frozenset] = set()
+        for (a, b), (node, fn_name) in expanded.items():
+            if (b, a) in expanded and frozenset((a, b)) not in reported:
+                reported.add(frozenset((a, b)))
+                other_fn = expanded[(b, a)][1]
+                findings.append(self.finding(
+                    ctx, node,
+                    f"lock-order inversion: `{fn_name}` acquires `{a}` then "
+                    f"`{b}`, but `{other_fn}` acquires `{b}` then `{a}` "
+                    f"(deadlock hazard)",
+                ))
+        return findings

@@ -1,0 +1,279 @@
+"""RL4 — exactly-once resolution of futures / request objects.
+
+PR 6's contract: every request submitted to the serving stack resolves to
+exactly one explicit outcome — shed, error, or result — and PR 6's worst bug
+(a poisoned ``Session.flush`` raising mid-batch and leaving *sibling* futures
+unresolved forever) is exactly a violation of it.  This checker runs a
+path-insensitive def-use analysis over "owned" future variables:
+
+* **Tracking starts** at ``x = ...create_future()`` / ``x = ResultFuture(...)``
+  assignments at function-statement level, at parameters named in a
+  ``# rl4: track=<var>`` annotation on the ``def`` line, or at for-loop
+  targets named in the same annotation on the ``for`` line (per-iteration
+  ownership — the ``Session.flush`` shape).
+* **Resolution** is a direct call ``x.set_result/set_exception/cancel/
+  _resolve/_reject(...)``.
+* **Handoff** (ownership transfer, equally discharging) is passing ``x`` as
+  an argument to any call (enqueueing a ``_Pending``, ``list.append``,
+  ``self._resolve(p, ...)``), storing it into an attribute/subscript, or
+  yielding it.  A bare ``return x`` is NOT a discharge: the caller awaits the
+  future, it does not adopt the duty to resolve it.
+
+Each ``return``, ``raise``, loop-iteration end, and function end must be
+reached with the variable ALWAYS discharged; a direct resolver call on an
+already-discharged path is flagged as a double resolution.
+
+Escape hatch: ``# future-ok: <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable
+
+from tools.reprolint.checkers.common import FuncDef, dotted
+from tools.reprolint.core import Checker, Context, Finding
+
+TRACK_MARKER = "rl4: track="
+CREATION_LEAVES = {"create_future", "Future", "ResultFuture"}
+RESOLVER_METHODS = {"set_result", "set_exception", "cancel", "_resolve", "_reject"}
+
+NEVER, MAYBE, ALWAYS = 0, 1, 2
+
+
+def _join(a: int, b: int) -> int:
+    return a if a == b else MAYBE
+
+
+@dataclasses.dataclass
+class _Out:
+    state: int
+    term: bool = False  # every path through the block returned or raised
+
+
+class ExactlyOnceFutureChecker(Checker):
+    """RL4: every path resolves or hands off each owned future exactly once."""
+
+    rule_id = "RL4"
+    title = "exactly-once future resolution"
+
+    def visit(self, ctx: Context) -> Iterable[Finding]:
+        findings: list[Finding] = []
+        for fn in [n for n in ast.walk(ctx.tree) if isinstance(n, FuncDef)]:
+            findings.extend(self._check_function(ctx, fn))
+        return findings
+
+    # -- tracked-variable discovery ----------------------------------------
+
+    def _check_function(self, ctx: Context, fn) -> list[Finding]:
+        findings: list[Finding] = []
+
+        # Parameters opted in on the def line: tracked from function start.
+        header = ctx.comment_on_or_above(fn.lineno)
+        if TRACK_MARKER in header:
+            var = header.split(TRACK_MARKER, 1)[1].split()[0]
+            out = self._analyze(ctx, fn.body, var, NEVER, findings, loop_body=False)
+            if not out.term and out.state != ALWAYS:
+                findings.append(self._unresolved(ctx, fn, var, out.state, "function end"))
+
+        # Creations at function-statement level: tracked from the next stmt.
+        # `with` blocks are flattened first — they neither branch nor raise
+        # resolution events, and futures are routinely created under a lock.
+        flat = self._flatten_withs(fn.body)
+        for i, stmt in enumerate(flat):
+            var = self._creation_target(stmt)
+            if var is None:
+                continue
+            out = self._analyze(
+                ctx, flat[i + 1:], var, NEVER, findings, loop_body=False
+            )
+            if not out.term and out.state != ALWAYS:
+                findings.append(self._unresolved(ctx, fn, var, out.state, "function end"))
+
+        # Annotated for-loops: per-iteration ownership of the loop target.
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.For, ast.AsyncFor)):
+                continue
+            comment = ctx.comment_on_or_above(node.lineno)
+            if TRACK_MARKER not in comment:
+                continue
+            var = comment.split(TRACK_MARKER, 1)[1].split()[0]
+            out = self._analyze(ctx, node.body, var, NEVER, findings, loop_body=True)
+            if not out.term and out.state != ALWAYS:
+                findings.append(self._unresolved(ctx, node, var, out.state, "loop iteration end"))
+
+        return findings
+
+    @classmethod
+    def _flatten_withs(cls, stmts) -> list[ast.stmt]:
+        flat: list[ast.stmt] = []
+        for stmt in stmts:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                flat.extend(cls._flatten_withs(stmt.body))
+            else:
+                flat.append(stmt)
+        return flat
+
+    @staticmethod
+    def _creation_target(stmt: ast.stmt) -> str | None:
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            return None
+        target = stmt.targets[0]
+        if not isinstance(target, ast.Name):
+            return None
+        value = stmt.value
+        if isinstance(value, ast.Call) and dotted(value.func).rpartition(".")[2] in CREATION_LEAVES:
+            return target.id
+        return None
+
+    def _unresolved(self, ctx, node, var, state, where) -> Finding:
+        qualifier = "may leave" if state == MAYBE else "leaves"
+        return self.finding(
+            ctx, node,
+            f"{qualifier} `{var}` unresolved at {where}: every path must call "
+            f"exactly one of set_result/set_exception/_resolve/_reject or hand "
+            f"the future off",
+        )
+
+    # -- path-state analysis ------------------------------------------------
+
+    def _analyze(self, ctx, stmts, var, state, findings, loop_body) -> _Out:
+        term = False
+        for stmt in stmts:
+            if term:
+                break
+            state, term = self._step(ctx, stmt, var, state, findings, loop_body)
+        return _Out(state, term)
+
+    def _step(self, ctx, stmt, var, state, findings, loop_body):
+        if isinstance(stmt, ast.If):
+            state = self._apply_events(ctx, stmt.test, var, state, findings)
+            b = self._analyze(ctx, stmt.body, var, state, findings, loop_body)
+            e = self._analyze(ctx, stmt.orelse, var, state, findings, loop_body)
+            if b.term and e.term:
+                return state, True
+            if b.term:
+                return e.state, False
+            if e.term:
+                return b.state, False
+            return _join(b.state, e.state), False
+
+        if isinstance(stmt, ast.Try):
+            b = self._analyze(ctx, stmt.body, var, state, findings, loop_body)
+            else_out = self._analyze(
+                ctx, stmt.orelse, var, b.state, findings, loop_body
+            ) if not b.term else b
+            # A handler can run with the body's work partially done; be
+            # conservative and analyze it from the pre-try state.
+            branch_outs = [else_out]
+            for handler in stmt.handlers:
+                branch_outs.append(
+                    self._analyze(ctx, handler.body, var, state, findings, loop_body)
+                )
+            live = [o for o in branch_outs if not o.term]
+            if not live:
+                out_state, out_term = state, True
+            else:
+                out_state = live[0].state
+                for o in live[1:]:
+                    out_state = _join(out_state, o.state)
+                out_term = False
+            if stmt.finalbody:
+                f = self._analyze(ctx, stmt.finalbody, var, out_state, findings, loop_body)
+                out_state, out_term = f.state, out_term or f.term
+            return out_state, out_term
+
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            if isinstance(stmt, ast.While):
+                state = self._apply_events(ctx, stmt.test, var, state, findings)
+            else:
+                state = self._apply_events(ctx, stmt.iter, var, state, findings)
+            body_out = self._analyze(ctx, stmt.body, var, state, findings, loop_body)
+            else_out = self._analyze(ctx, stmt.orelse, var, state, findings, loop_body)
+            merged = state if body_out.term else _join(state, body_out.state)
+            if not else_out.term:
+                merged = _join(merged, else_out.state)
+            return merged, False
+
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                state = self._apply_events(ctx, item.context_expr, var, state, findings)
+            out = self._analyze(ctx, stmt.body, var, state, findings, loop_body)
+            return out.state, out.term
+
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                state = self._apply_events(ctx, stmt.value, var, state, findings)
+            if state != ALWAYS:
+                findings.append(self._unresolved(ctx, stmt, var, state, "return"))
+            return state, True
+
+        if isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                state = self._apply_events(ctx, stmt.exc, var, state, findings)
+            if state != ALWAYS:
+                findings.append(self._unresolved(ctx, stmt, var, state, "raise"))
+            return state, True
+
+        if isinstance(stmt, (ast.Continue, ast.Break)) and loop_body:
+            if state != ALWAYS:
+                findings.append(self._unresolved(
+                    ctx, stmt, var, state,
+                    "continue" if isinstance(stmt, ast.Continue) else "break",
+                ))
+            return state, True
+
+        if isinstance(stmt, FuncDef + (ast.ClassDef,)):
+            return state, False
+
+        # Plain statement (Expr, Assign, AugAssign, Assert, Delete, ...):
+        # apply resolver/handoff events found anywhere inside it.
+        new_state = state
+        for node in ast.walk(stmt):
+            new_state = self._apply_node_event(ctx, node, stmt, var, new_state, findings)
+        return new_state, False
+
+    def _apply_events(self, ctx, expr, var, state, findings) -> int:
+        for node in ast.walk(expr):
+            state = self._apply_node_event(ctx, node, expr, var, state, findings)
+        return state
+
+    def _apply_node_event(self, ctx, node, stmt, var, state, findings) -> int:
+        if isinstance(node, ast.Call):
+            # Direct resolver: `var.set_result(...)` etc.
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr in RESOLVER_METHODS
+                and isinstance(f.value, ast.Name)
+                and f.value.id == var
+            ):
+                if state == ALWAYS:
+                    findings.append(self.finding(
+                        ctx, node,
+                        f"`{var}.{f.attr}()` on an already-discharged path: the "
+                        f"future may be resolved twice",
+                    ))
+                return ALWAYS
+            # Handoff: var passed as an argument to any call.
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if any(
+                    isinstance(n, ast.Name) and n.id == var for n in ast.walk(arg)
+                ):
+                    return ALWAYS
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            # Handoff: var stored into an attribute or container slot.
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            value = node.value
+            if value is not None and any(
+                isinstance(n, ast.Name) and n.id == var for n in ast.walk(value)
+            ):
+                for t in targets:
+                    if isinstance(t, (ast.Attribute, ast.Subscript)):
+                        return ALWAYS
+        if isinstance(node, (ast.Yield, ast.YieldFrom)) and node.value is not None:
+            if any(isinstance(n, ast.Name) and n.id == var for n in ast.walk(node.value)):
+                return ALWAYS
+        return state
+    # NOTE: `return var` is deliberately NOT a discharge — see module docstring.

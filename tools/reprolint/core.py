@@ -1,0 +1,215 @@
+"""reprolint framework: findings, checker plugin API, suppressions, baseline.
+
+A checker is a class with a ``rule_id`` and a ``visit(ctx)`` method returning
+``Finding`` objects; ``Context`` hands it the parsed AST, the raw source, and
+a tokenize-derived per-line comment map (AST alone drops comments, and the
+``# guarded-by:`` / ``# lock-ok:`` conventions live in comments).
+
+Suppression and baseline handling are centralized here so individual checkers
+only ever emit; ``run_paths`` filters.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import io
+import json
+import tokenize
+from pathlib import Path
+from typing import Iterable, Iterator
+
+RULES = ("RL1", "RL2", "RL3", "RL4")
+
+# Per-rule escape-hatch comment markers (line-level, reason required).
+ESCAPE_MARKERS = {
+    "RL1": "trace-ok:",
+    "RL2": "packed-ok:",
+    "RL3": "lock-ok:",
+    "RL4": "future-ok:",
+}
+
+DISABLE_MARKER = "reprolint: disable="
+
+# Directories never scanned: build residue plus the deliberately-dirty
+# selftest fixtures (they exist to make rules fire).
+EXCLUDED_DIR_NAMES = {"__pycache__", ".git", ".pytest_cache", ".hypothesis", "selftest"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    file: str
+    line: int
+    rule_id: str
+    message: str
+
+    def fingerprint(self, source_line: str = "") -> str:
+        """Stable id for baselining: path + rule + normalized line text.
+
+        Deliberately excludes the line *number* so unrelated edits above a
+        grandfathered finding do not un-baseline it.
+        """
+        key = f"{self.file}::{self.rule_id}::{source_line.strip()}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: {self.rule_id} {self.message}"
+
+
+class Context:
+    """Everything a checker may inspect about one source file."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source, filename=rel)
+        self.lines = source.splitlines()
+        self.comments = _comment_map(source)
+        self._block_suppressed = _block_suppressions(self.tree, self.comments)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def comment_on_or_above(self, lineno: int) -> str:
+        """Comment text attached to a line: same line, else the line above."""
+        own = self.comments.get(lineno)
+        if own is not None:
+            return own
+        return self.comments.get(lineno - 1, "")
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        for probe in (finding.line, finding.line - 1):
+            text = self.comments.get(probe, "")
+            if DISABLE_MARKER in text:
+                named = text.split(DISABLE_MARKER, 1)[1]
+                if finding.rule_id in named:
+                    return True
+            marker = ESCAPE_MARKERS[finding.rule_id]
+            if marker in text:
+                return True
+        for rule_id, lo, hi in self._block_suppressed:
+            if rule_id == finding.rule_id and lo <= finding.line <= hi:
+                return True
+        return False
+
+
+class Checker:
+    """Plugin base: subclass, set ``rule_id``/``title``, implement ``visit``."""
+
+    rule_id = "RL0"
+    title = "abstract checker"
+
+    def visit(self, ctx: Context) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: Context, node: ast.AST, message: str) -> Finding:
+        return Finding(ctx.rel, getattr(node, "lineno", 1), self.rule_id, message)
+
+
+def _comment_map(source: str) -> dict[int, str]:
+    """Map line number -> comment text (without ``#``) for the whole file."""
+    out: dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string.lstrip("#").strip()
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def _block_suppressions(
+    tree: ast.Module, comments: dict[int, str]
+) -> list[tuple[str, int, int]]:
+    """``# reprolint: disable=RLx`` on a def/class header covers its body."""
+    spans: list[tuple[str, int, int]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            header = comments.get(node.lineno, "")
+            if DISABLE_MARKER in header:
+                named = header.split(DISABLE_MARKER, 1)[1]
+                for rule_id in RULES:
+                    if rule_id in named:
+                        spans.append((rule_id, node.lineno, node.end_lineno or node.lineno))
+    return spans
+
+
+def iter_py_files(paths: Iterable[str | Path], root: Path) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_file() and p.suffix == ".py":
+            yield p
+            continue
+        if not p.is_dir():
+            continue
+        for f in sorted(p.rglob("*.py")):
+            if any(part in EXCLUDED_DIR_NAMES for part in f.parts):
+                continue
+            yield f
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("fingerprints", []))
+
+
+def default_checkers() -> list[Checker]:
+    # Imported lazily so `Context`/`Checker` stay importable from fixtures
+    # without dragging every checker in.
+    from tools.reprolint.checkers import ALL_CHECKERS
+
+    return [cls() for cls in ALL_CHECKERS]
+
+
+def check_file(
+    path: Path, root: Path, checkers: Iterable[Checker] | None = None
+) -> list[Finding]:
+    """Run checkers over one file, honoring line/block suppressions."""
+    rel = str(path.relative_to(root)) if path.is_relative_to(root) else str(path)
+    source = path.read_text()
+    try:
+        ctx = Context(path, rel, source)
+    except SyntaxError as exc:
+        return [Finding(rel, exc.lineno or 1, "RL0", f"syntax error: {exc.msg}")]
+    out: list[Finding] = []
+    for checker in checkers if checkers is not None else default_checkers():
+        for finding in checker.visit(ctx):
+            if not ctx.is_suppressed(finding):
+                out.append(finding)
+    return sorted(out, key=lambda f: (f.line, f.rule_id))
+
+
+def run_paths(
+    paths: Iterable[str | Path],
+    root: Path | None = None,
+    baseline: set[str] | None = None,
+    checkers: Iterable[Checker] | None = None,
+) -> tuple[list[Finding], list[Finding]]:
+    """Check all files under ``paths``; return (new, baselined) findings."""
+    root = root or Path.cwd()
+    baseline = baseline or set()
+    checkers = list(checkers) if checkers is not None else default_checkers()
+    new: list[Finding] = []
+    old: list[Finding] = []
+    for f in iter_py_files(paths, root):
+        rel_source_lines = None
+        for finding in check_file(f, root, checkers):
+            if rel_source_lines is None:
+                rel_source_lines = f.read_text().splitlines()
+            line_text = (
+                rel_source_lines[finding.line - 1]
+                if 0 < finding.line <= len(rel_source_lines)
+                else ""
+            )
+            (old if finding.fingerprint(line_text) in baseline else new).append(finding)
+    return new, old

@@ -1,3 +1,7 @@
+# Frozen copy of src/repro/serve/metrics.py at the time the RL3
+# guarded-by annotations landed.  tests/test_reprolint.py asserts all
+# four checkers stay silent on it — a regression canary for checker
+# false positives.  Do NOT sync with the live module.
 """Serving observability: lock-consistent counters + latency histograms
 (DESIGN.md Sect. 10.5).
 

@@ -1,0 +1,32 @@
+"""RL1 bad fixture: every trace-safety hazard the rule must catch."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_TOP = jnp.zeros((4,), dtype=jnp.uint32)  # RL1: module-level jnp constant
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "opts"))
+def solve(chi, mode="gs", opts=[]):  # RL1: unhashable static default
+    if chi:  # RL1: Python branch on a tracer
+        chi = chi + 1
+    n = int(chi)  # RL1: host sync bool/int/float
+    host = np.asarray(chi)  # RL1: np.asarray on a traced value
+    s = chi.sum().item()  # RL1: .item() host sync
+    return chi, n, host, s
+
+
+def body(state):
+    val = helper(state)
+    return state + val
+
+
+def helper(x):
+    return float(x)  # RL1: host sync in a while_loop-reachable helper
+
+
+def run(init):
+    return jax.lax.while_loop(lambda s: s.all(), body, init)

@@ -1,0 +1,27 @@
+"""RL1 good fixture: trace-safe idioms that must stay silent."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# numpy on purpose: a jnp constant here would initialize the backend early.
+_TOP = np.zeros((4,), dtype=np.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "n"))
+def solve(chi, mode="gs", n=4):
+    if mode == "gs":  # static-argname branch: fine
+        chi = chi + 1
+    if chi.shape[0] == 0:  # static structure (shape): fine
+        return chi
+    if chi is None:  # identity comparison: fine
+        return jnp.zeros((n,), dtype=jnp.uint32)
+    width = int(chi.shape[0])  # host int of static structure: fine
+    return chi * width
+
+
+def host_helper(x):
+    # Not jit-reachable: host syncs are legal here.
+    return float(np.asarray(x).sum())

@@ -1,0 +1,14 @@
+"""RL2 bad fixture: pad-bit violations on packed words outside bitops."""
+
+import jax.numpy as jnp
+
+from repro.core import bitops
+
+
+def phantom_nodes(flags, n):
+    words = bitops.pack(flags)
+    comp = ~words  # RL2: unmasked complement turns pad bits on
+    total = jnp.sum(words)  # RL2: raw reduction; use bitops.popcount
+    blown = words | 0xFFFFFFFF  # RL2: OR with all-ones sets pad bits
+    per_row = words.sum(axis=1)  # RL2: raw .sum() on packed words
+    return comp, total, blown, per_row

@@ -1,0 +1,13 @@
+"""RL2 good fixture: pad-safe handling of packed words."""
+
+from repro.core import bitops
+
+
+def masked(flags, n):
+    words = bitops.pack(flags)
+    comp = ~words & bitops.ones_mask(n)  # masked complement: fine
+    comp2 = bitops.bnot(words, n)  # sanctioned helper: fine
+    narrowed = words & comp2  # AND-only dataflow preserves pad zeros
+    total = bitops.popcount(words)  # pad-aware reduction: fine
+    flags_back = bitops.unpack(words, n)  # unpack leaves the packed domain
+    return comp, narrowed, total, flags_back.sum()

@@ -1,0 +1,33 @@
+"""RL3 bad fixture: guarded-field races, await-under-lock, order inversion."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition()
+        self.total = 0  # guarded-by: _lock
+        self.flushes = 0  # guarded-by: _cv
+
+    def bump(self):
+        with self._lock:
+            self.total += 1
+
+    def read_torn(self):
+        return self.total  # RL3: guarded field read outside its lock
+
+    def order_a(self):
+        with self._lock:
+            with self._cv:
+                self.flushes += 1
+
+    def order_b(self):
+        with self._cv:
+            with self._lock:  # RL3: inverts order_a's _lock -> _cv order
+                self.total += 1
+
+    async def slow_path(self, coro):
+        with self._lock:
+            await coro  # RL3: await while holding a threading lock
+            self.total += 1

@@ -1,0 +1,39 @@
+"""RL3 good fixture: disciplined lock usage that must stay silent."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition()
+        self.total = 0  # guarded-by: _lock
+        self.flushes = 0  # guarded-by: _cv
+
+    def bump(self):
+        with self._lock:
+            self.total += 1
+
+    def read_consistent(self):
+        with self._lock:
+            return self.total
+
+    def order_a(self):
+        with self._lock:
+            with self._cv:
+                self.flushes += 1
+
+    def order_same(self):
+        with self._lock:
+            with self._cv:
+                self.flushes += 2
+
+    # requires-lock: _lock
+    def _bump_locked(self):
+        self.total += 1
+
+    async def slow_path(self, coro):
+        with self._lock:
+            snapshot = self.total
+        await coro
+        return snapshot

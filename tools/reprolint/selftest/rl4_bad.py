@@ -1,0 +1,28 @@
+"""RL4 bad fixture: futures leaked or resolved twice."""
+
+
+class Server:
+    def submit(self, req):
+        fut = self._loop.create_future()
+        if req.too_big:
+            return fut  # RL4: returns with fut unresolved (return is not a discharge)
+        self._queue.append(Pending(req, fut))
+        return fut
+
+    def double(self):
+        fut = self._loop.create_future()
+        fut.set_result(1)
+        fut.set_result(2)  # RL4: double resolution
+        return fut
+
+    def flush(self, items):
+        for fut in items:  # rl4: track=fut
+            if fut.ready:
+                fut._resolve(1)
+            # RL4: iteration may end without resolving fut
+
+
+class Pending:
+    def __init__(self, req, future):
+        self.req = req
+        self.future = future

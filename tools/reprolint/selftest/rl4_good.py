@@ -1,0 +1,26 @@
+"""RL4 good fixture: every path discharges the future exactly once."""
+
+
+class Server:
+    def submit(self, req):
+        fut = self._loop.create_future()
+        if req.too_big:
+            fut.set_exception(ValueError("too big"))
+            return fut
+        self._queue.append(Pending(req, fut))  # handoff: queue owns it now
+        return fut
+
+    def flush(self, items):
+        for fut in items:  # rl4: track=fut
+            try:
+                value = self._compute()
+            except Exception as exc:
+                fut._reject(exc)
+            else:
+                fut._resolve(value)
+
+
+class Pending:
+    def __init__(self, req, future):
+        self.req = req
+        self.future = future
