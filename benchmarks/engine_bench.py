@@ -41,6 +41,17 @@ contract of benchmarks/run.py) and written to results/bench/engine.json:
   ``--fused-only`` runs just this section and gates on the bar (the CI
   perf-smoke step); ``--tiny`` runs without it skip the section so a CI
   pipeline times the cross-engine sweep exactly once.
+* ``rdf`` (``--rdf``) — the DBpedia/LUBM-scale RDF workload (ISSUE 8): a
+  LUBM-shaped N-Triples file is stream-generated
+  (``synth.lubm_stream`` -> ``rdf.dump_stream``), ingested back through the
+  chunked dictionary-encoding ``rdf.load_stream``, and queried at a node
+  count where the dense ``[n, n]`` operand tier is *structurally
+  impossible* — the section asserts ``dense_adjacency`` raises
+  ``MemoryError``, that the cost model hard-infs every dense-layout tier,
+  and that auto-selection lands on an edge-list engine before timing
+  cold/warm queries.  Writes ``results/bench/engine.rdf.json`` and appends
+  ingest rate + query latency to ``BENCH_engine.json``.  ``--tiny`` keeps
+  the workload just past the dense budget (CI smoke).
 * ``mutation`` (``--mutation``) — incremental maintenance under churn
   (DESIGN.md Sect. 8): at each mutation rate, a round deletes / re-inserts
   ``rate * |E|`` random edges against two databases fed identical updates —
@@ -245,6 +256,85 @@ def packed_fused(graph, *, reps: int = 5) -> dict:
     }
 
 
+def rdf_scale(*, universities: int, warm_iters: int = 5) -> dict:
+    """Streaming RDF ingest + query past the dense-tier memory budget.
+
+    The point of the section is the *negative space*: at this node count no
+    ``[n, n]`` operand can exist, so the run first proves the dense tier is
+    gone (construction raises, the cost model hard-infs it) and then shows
+    the edge-list engines serving the workload anyway.
+    """
+    import tempfile
+
+    from repro.core import soi, sparql
+    from repro.core.graph import DENSE_ADJ_MAX_BYTES
+    from repro.data import rdf
+    from repro.engine.cost import choose_engine
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "lubm.nt")
+        t0 = time.perf_counter()
+        n_triples = rdf.dump_stream(
+            synth.lubm_stream(n_universities=universities, seed=0), path
+        )
+        t_gen = time.perf_counter() - t0
+        nt_bytes = os.path.getsize(path)
+        t0 = time.perf_counter()
+        graph = rdf.load_stream(path)
+        t_ingest = time.perf_counter() - t0
+
+    # -- the dense tier must be structurally impossible here ------------- #
+    assert graph.n_nodes * graph.n_nodes > DENSE_ADJ_MAX_BYTES, (
+        f"{graph.n_nodes} nodes still fit the dense budget; "
+        "raise --universities"
+    )
+    try:
+        graph.dense_adjacency(0)
+    except MemoryError:
+        pass
+    else:
+        raise AssertionError(
+            "dense [n, n] adjacency was constructible at RDF scale"
+        )
+    q = "{ ?d subOrganizationOf Univ0 . ?s memberOf ?d }"
+    c = soi.compile_soi(soi.build_soi(sparql.parse(q)), graph)
+    est = choose_engine(graph, c)
+    for tier in ("dense", "packed", "packed_fused"):
+        assert est.costs[tier] == float("inf"), (
+            f"cost model priced the infeasible {tier} tier finitely"
+        )
+    assert est.engine in ("sparse", "jacobi_packed", "partitioned")
+
+    # -- and the edge-list engines serve the workload anyway ------------- #
+    db = GraphDB(graph, engine="auto")
+    reqs = _mk_requests(db, warm_iters + 1)
+    t0 = time.perf_counter()
+    first = db.query(reqs[0])
+    t_cold = time.perf_counter() - t0
+    warm_times = []
+    for req in reqs[1:]:
+        t0 = time.perf_counter()
+        res = db.query(req)
+        warm_times.append(time.perf_counter() - t0)
+        assert res.cache_hit, "warm RDF request missed the plan cache"
+    return {
+        "bench": "rdf",
+        "universities": universities,
+        "n_nodes": graph.n_nodes,
+        "n_triples": n_triples,
+        "nt_bytes": nt_bytes,
+        "t_generate": t_gen,
+        "t_ingest": t_ingest,
+        "ingest_triples_per_s": n_triples / t_ingest,
+        "engine": first.engine,
+        "chosen_engine": est.engine,
+        "t_cold": t_cold,
+        "t_warm": float(np.median(warm_times)),
+        "n_survivor_triples": int(np.count_nonzero(first.survivor_mask)),
+        "dense_tier_infeasible": True,
+    }
+
+
 def append_bench_summary(entry: dict) -> None:
     """Append one run record to the top-level ``BENCH_engine.json``.
 
@@ -350,6 +440,9 @@ def main() -> None:
     ap.add_argument("--fused-only", action="store_true",
                     help="run only the packed_fused sweep-throughput section "
                          "(CI perf smoke) and append to BENCH_engine.json")
+    ap.add_argument("--rdf", action="store_true",
+                    help="run only the RDF-scale streaming-ingest section at "
+                         "a node count past the dense [n, n] budget")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke mode: small graph, few requests")
     args = ap.parse_args()
@@ -358,6 +451,38 @@ def main() -> None:
         args.requests = min(args.requests, 12)
     if args.devices == 0 and args.engine == "partitioned":
         args.devices = 8
+
+    if args.rdf:
+        # ~181 nodes/university: 285 is the smallest --tiny size that still
+        # clears the ~46341-node dense-infeasibility threshold
+        unis = 285 if args.tiny else 600
+        row = rdf_scale(universities=unis, warm_iters=3 if args.tiny else 5)
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, "engine.rdf.json"), "w") as f:
+            json.dump([row], f, indent=1, default=str)
+        print(f"# rdf: {row['n_triples']} triples / {row['n_nodes']} nodes "
+              f"({row['nt_bytes'] / 1e6:.1f} MB N-Triples); dense tier "
+              f"asserted infeasible, auto chose {row['chosen_engine']}")
+        print(f"engine/rdf_ingest,{row['t_ingest']*1e6:.1f},"
+              f"triples_per_s={row['ingest_triples_per_s']:.0f}")
+        print(f"engine/rdf_cold,{row['t_cold']*1e6:.1f},"
+              f"engine={row['engine']}")
+        print(f"engine/rdf_warm,{row['t_warm']*1e6:.1f},"
+              f"speedup={row['t_cold'] / row['t_warm']:.1f}x")
+        append_bench_summary({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "bench": "rdf",
+            "tiny": bool(args.tiny),
+            "universities": unis,
+            "n_nodes": row["n_nodes"],
+            "n_triples": row["n_triples"],
+            "ingest_triples_per_s": row["ingest_triples_per_s"],
+            "engine": row["engine"],
+            "t_cold": row["t_cold"],
+            "t_warm": row["t_warm"],
+            "dense_tier_infeasible": True,
+        })
+        return
 
     mesh = None
     if args.devices > 1:

@@ -47,6 +47,7 @@ def main() -> None:
         _emit("iterations_sect53", tables.iterations_analysis(), None)
     if "kernels" in sections:
         _emit("kernels_micro", kernels_bench.bitmm_micro(), "t_pallas_interpret")
+        _emit("kernels_segor", kernels_bench.segor_micro(), "t_packed_words")
     if "roofline" in sections:
         _emit("roofline_pod", roofline.table("pod"), None)
         _emit("roofline_multipod", roofline.table("multipod"), None)

@@ -14,16 +14,21 @@ Four engines compute the largest solution of a compiled SOI:
   ``lax.while_loop`` and one fused ``bitmm_apply`` launch per operator does
   product + AND-combine + changed detection on packed words (DESIGN.md
   Sect. 9).
-* ``solve_sparse`` — edge-list engine: the boolean product is a gather +
-  ``segment_max`` over edges, i.e. message passing in the OR-AND semiring.
-  ``mode="gs"`` is paper-faithful Gauss–Seidel; ``mode="jacobi_packed"``
-  carries bit-packed chi through the loop and reads frontier bits straight
-  out of the packed words — the former per-sweep pack→broadcast→unpack
-  round trip is gone.
+* ``solve_sparse`` — edge-list engine: the boolean product is a segmented
+  OR over edges, i.e. message passing in the OR-AND semiring.  Since
+  ISSUE 8 *both* modes carry bit-packed chi through the whole while_loop:
+  the segmented-OR primitive (``kernels/segsum``) emits ``y`` already
+  packed ``uint32 [V, nw]``, so no bool plane and no per-sweep
+  ``bitops.pack`` exist anywhere in the loop.  ``mode="gs"`` applies
+  operators sequentially (paper-faithful ordering); ``mode="jacobi_packed"``
+  reads every operator's frontier bits out of ONE replicated copy of the
+  packed words per sweep.
 * ``solve_partitioned`` — destination-partitioned (vertex-cut) edge blocks
-  over a device mesh: block-local segment reductions over a bit-packed chi
-  state; the ONLY cross-shard traffic per sweep is replicating the n/8-byte
-  packed words chi already lives in (DESIGN.md Sect. 7 / 9).
+  over a device mesh: block-local segmented ORs emit block-local packed
+  words (the block size is 32-aligned so local words concatenate into the
+  global word order); the ONLY cross-shard traffic per sweep is replicating
+  the n/8-byte packed words chi already lives in (DESIGN.md Sect. 7 / 9 /
+  12).
 * ``solve_worklist`` — the paper's own sequential strategy (Sect. 3.2 steps
   1–2 with the Sect. 3.3 heuristics); numpy, used for Table-2 parity and
   iteration-count studies.
@@ -148,6 +153,13 @@ class Operands:
     # (pad rows use dst = n_local, dropped by the segment reduce).
     edge_src_b: tuple | None = None  # per-mat int32 [W, Eb] global src
     edge_dst_b: tuple | None = None  # per-mat int32 [W, Eb] local dst
+    # blocked segmented-OR layout (ISSUE 8): edges sorted and blocked by
+    # destination word window for the Pallas segor kernel.  Built alongside
+    # the flat edge lists in make_sparse_operands; pad rows carry the
+    # sentinel destination n_pad (never a bit), see prepare_segor.
+    seg_src_b: tuple | None = None  # per-mat int32 [G_m, BE] source nodes
+    seg_dst_b: tuple | None = None  # per-mat int32 [G_m, BE] absolute dst
+    seg_win: tuple | None = None  # per-mat int32 [G_m] dst-word window
 
 
 def _base_operands(c: CompiledSOI) -> dict:
@@ -239,19 +251,53 @@ def _oriented_edges(g: Graph, a: int, d: int) -> tuple[np.ndarray, np.ndarray]:
     return (e[:, 0], e[:, 1]) if d == FWD else (e[:, 1], e[:, 0])
 
 
+def _segor_mat(
+    s: np.ndarray, t: np.ndarray, n: int, min_g: int = 0
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Blocked segmented-OR layout for one operator's RAW edge list.
+
+    Feeds the Pallas segor kernel: edges sorted by destination and split
+    into blocks that each touch one destination-word window.  Pad rows
+    gather source 0 but carry the sentinel destination ``n_pad``, which can
+    never turn on a bit (:func:`repro.kernels.segsum.kernel.prepare_segor`)
+    — crucially NOT the flat layout's pad id ``n``, which would alias bit
+    ``n`` whenever ``n`` lies inside a live window.
+    """
+    from repro.kernels.segsum import kernel as segsum_kernel
+
+    idx_b, seg_b, win, _ = segsum_kernel.prepare_segor(t, n, min_g=min_g)
+    src_b = (
+        np.asarray(s, np.int32)[idx_b]
+        if len(s)
+        else np.zeros(idx_b.shape, np.int32)
+    )
+    return jnp.asarray(src_b), jnp.asarray(seg_b), jnp.asarray(win)
+
+
 def make_sparse_operands(
     c: CompiledSOI, g: Graph, adj_cache: dict | None = None
 ) -> Operands:
     def build():
-        srcs, dsts = [], []
+        srcs, dsts, sbs, dbs, wbs = [], [], [], [], []
         for a, d in c.mats:
-            s, t = _padded_edge_list(*_oriented_edges(g, a, d), g.n_nodes)
-            srcs.append(jnp.asarray(s, jnp.int32))
-            dsts.append(jnp.asarray(t, jnp.int32))
-        return tuple(srcs), tuple(dsts)
+            s, t = _oriented_edges(g, a, d)
+            ps, pt = _padded_edge_list(s, t, g.n_nodes)
+            srcs.append(jnp.asarray(ps, jnp.int32))
+            dsts.append(jnp.asarray(pt, jnp.int32))
+            sb, db, wb = _segor_mat(s, t, g.n_nodes)
+            sbs.append(sb)
+            dbs.append(db)
+            wbs.append(wb)
+        return tuple(srcs), tuple(dsts), tuple(sbs), tuple(dbs), tuple(wbs)
 
-    src, dst = _cached_adj(adj_cache, ("sparse", tuple(c.mats)), g, build)
-    return Operands(edge_src=src, edge_dst=dst, **_base_operands(c))
+    src, dst, sb, db, wb = _cached_adj(
+        adj_cache, ("sparse", tuple(c.mats)), g, build
+    )
+    return Operands(
+        edge_src=src, edge_dst=dst,
+        seg_src_b=sb, seg_dst_b=db, seg_win=wb,
+        **_base_operands(c),
+    )
 
 
 def _partitioned_mat(
@@ -280,10 +326,12 @@ def _partitioned_mat(
 
 
 def padded_node_count(n: int, n_blocks: int) -> int:
-    """Smallest multiple of ``n_blocks`` holding ``n`` nodes (block size is
-    uniform across shards; pad columns are dead and sliced off after the
-    solve)."""
-    return max(-(-n // n_blocks), 1) * n_blocks
+    """Smallest node count splitting into ``n_blocks`` uniform blocks of
+    whole 32-bit words (block size is a word multiple since ISSUE 8, so the
+    blocks' packed local words concatenate directly into the global word
+    order; pad columns are dead and sliced off after the solve)."""
+    n_local = -(-max(-(-n // n_blocks), 1) // bitops.WORD) * bitops.WORD
+    return n_local * n_blocks
 
 
 def make_partitioned_operands(
@@ -423,16 +471,34 @@ def patch_operands(
 
         def patch_edges():
             src, dst = list(ops.edge_src), list(ops.edge_dst)
+            sbs = list(ops.seg_src_b) if ops.seg_src_b is not None else None
+            dbs = list(ops.seg_dst_b) if ops.seg_dst_b is not None else None
+            wbs = list(ops.seg_win) if ops.seg_win is not None else None
             for m in touched:
                 a, d = c_new.mats[m]
-                s, t = _padded_edge_list(
-                    *_oriented_edges(g, a, d), n,
-                    min_cap=int(ops.edge_src[m].shape[0]),
+                s, t = _oriented_edges(g, a, d)
+                ps, pt = _padded_edge_list(
+                    s, t, n, min_cap=int(ops.edge_src[m].shape[0])
                 )
-                src[m], dst[m] = jnp.asarray(s), jnp.asarray(t)
-            return tuple(src), tuple(dst)
+                src[m], dst[m] = jnp.asarray(ps), jnp.asarray(pt)
+                if sbs is not None:
+                    # the blocked layout keeps its superseded block count
+                    # whenever the churned edges still fit, mirroring the
+                    # flat lists' EDGE_PAD capacity rule (zero retraces)
+                    sbs[m], dbs[m], wbs[m] = _segor_mat(
+                        s, t, n, min_g=int(ops.seg_src_b[m].shape[0])
+                    )
+            seg = (
+                (tuple(sbs), tuple(dbs), tuple(wbs))
+                if sbs is not None
+                else (None, None, None)
+            )
+            return (tuple(src), tuple(dst)) + seg
 
-        kw["edge_src"], kw["edge_dst"] = _cached_adj(
+        (
+            kw["edge_src"], kw["edge_dst"],
+            kw["seg_src_b"], kw["seg_dst_b"], kw["seg_win"],
+        ) = _cached_adj(
             adj_cache, ("sparse", tuple(c_new.mats)), g, patch_edges
         )
     return dataclasses.replace(
@@ -636,38 +702,72 @@ def _packed_start(ops: Operands, chi0: jax.Array | None) -> jax.Array:
     return jnp.bitwise_and(init_p, chi0)
 
 
-def _jacobi_packed_fixpoint(
+def _per_var_mask_packed(y_p: jax.Array, m: int, ops: Operands) -> jax.Array:
+    """:func:`_per_var_mask` on bit-packed ``y``: word-wise gathers + ANDs.
+
+    ``uint32 [V, nw]``; the appended pad row is all-ones (AND identity) and
+    chi's own pad bits are already zero, so no pad bit can ever turn on —
+    the same argument as :func:`_apply_copies_packed`.
+    """
+    nw = y_p.shape[-1]
+    vals = y_p[ops.mat_rhs[m]]  # [I_m, nw]
+    vals = jnp.concatenate([vals, jnp.full((1, nw), _ALL_ONES)])
+    return jax.lax.reduce(
+        vals[ops.mat_table[m]], _ALL_ONES, jax.lax.bitwise_and, (1,)
+    )  # [V, nw]
+
+
+def _packed_edge_fixpoint(
     propagate: Callable[[jax.Array, int], jax.Array],
     ops: Operands,
     max_sweeps: int | None,
     chi_spec=None,
     chi0: jax.Array | None = None,
+    *,
+    jacobi: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
-    """Shared driver of the packed-state Jacobi engines (jacobi_packed,
-    partitioned).  Per sweep: ONE replicate of the packed chi words serves
-    every operator, ``propagate(frontier_p, m)`` produces operator m's
-    boolean ``y`` (a segment reduce — JAX has no segmented OR, so y lands
-    in bool), all per-operator shrink masks AND together (Jacobi:
-    order-free) and fold into chi with a single pack, then the word-wise
-    copy step.  chi itself never round-trips; convergence is the word-level
-    ``new != chi`` of :func:`_sweep_fixpoint`.  Returns (bool chi, sweeps),
-    unpacked once after the fixpoint.
+    """Shared driver of the packed-state edge-list engines (sparse-gs,
+    jacobi_packed, partitioned).  ``propagate(chi_words, m)`` is operator
+    m's segmented OR and returns ``y`` already bit-packed ``uint32 [V,
+    nw]`` (the ISSUE-8 primitive) — no bool plane and no ``bitops.pack``
+    exist anywhere in the while body, which the ``tools.reprolint.dynamic``
+    audit enforces.
+
+    Jacobi: ONE replicate of the packed chi words serves every operator,
+    all per-operator shrink masks AND together (order-free) and fold into
+    chi word-wise.  Gauss–Seidel (``jacobi=False``): operators apply
+    sequentially, each reading the freshly-shrunk chi — the identical
+    per-operator order the bool-era GS ran, so sweep counts carry over
+    verbatim (DESIGN.md Sect. 12).  Convergence is the word-level ``new !=
+    chi`` of :func:`_sweep_fixpoint`.  Returns (bool chi, sweeps), unpacked
+    once after the fixpoint.
     """
     n = ops.init.shape[-1]
     n_mats = len(ops.mat_rhs)
 
-    def sweep(chi_p: jax.Array) -> jax.Array:
-        frontier_p = _replicated_frontier(chi_p, chi_spec)
-        shrink = None
-        for m in range(n_mats):
-            y = _wsc(propagate(frontier_p, m), chi_spec)
-            pv = _per_var_mask(y, m, ops)
-            shrink = pv if shrink is None else jnp.logical_and(shrink, pv)
-        if shrink is not None:
-            chi_p = _wsc(
-                jnp.bitwise_and(chi_p, bitops.pack(shrink)), chi_spec
-            )
-        return _apply_copies_packed(chi_p, ops)
+    if jacobi:
+
+        def sweep(chi_p: jax.Array) -> jax.Array:
+            frontier_p = _replicated_frontier(chi_p, chi_spec)
+            shrink = None
+            for m in range(n_mats):
+                y_p = _wsc(propagate(frontier_p, m), chi_spec)
+                pv = _per_var_mask_packed(y_p, m, ops)
+                shrink = pv if shrink is None else jnp.bitwise_and(shrink, pv)
+            if shrink is not None:
+                chi_p = _wsc(jnp.bitwise_and(chi_p, shrink), chi_spec)
+            return _apply_copies_packed(chi_p, ops)
+
+    else:
+
+        def sweep(chi_p: jax.Array) -> jax.Array:
+            for m in range(n_mats):
+                y_p = _wsc(propagate(chi_p, m), chi_spec)
+                chi_p = _wsc(
+                    jnp.bitwise_and(chi_p, _per_var_mask_packed(y_p, m, ops)),
+                    chi_spec,
+                )
+            return _apply_copies_packed(chi_p, ops)
 
     chi_p, it = _sweep_fixpoint(
         sweep, _packed_start(ops, chi0), max_sweeps, chi_spec
@@ -798,48 +898,69 @@ def solve_packed_fused(
     return bitops.unpack(chi_p, n), it
 
 
-@functools.partial(jax.jit, static_argnames=("max_sweeps", "chi_spec", "mode"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_sweeps", "chi_spec", "mode", "impl", "interpret"),
+)
 def solve_sparse(
     ops: Operands, *, max_sweeps: int | None = None, chi_spec=None,
-    mode: str = "gs", chi0: jax.Array | None = None,
+    mode: str = "gs", impl: str | None = None,
+    interpret: bool | None = None, chi0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Edge-list engine: gather + segment-max message passing (OR-AND).
+    """Edge-list engine: segmented-OR message passing over bit-packed chi.
 
-    One (gather, segment_max) pair per (label, direction) operator — the
-    GNN scatter regime; int32-safe at billion-edge scale because segments
-    are per-operator node ids.
+    One segmented OR per (label, direction) operator — the GNN scatter
+    regime; int32-safe at billion-edge scale because segments are
+    per-operator node ids.  Since ISSUE 8 chi lives bit-packed ``uint32
+    [V, nw]`` through the whole while_loop in BOTH modes: frontier bits
+    come straight out of the packed words (:func:`_edge_bits`) and ``y``
+    comes back already packed from the segmented-OR primitive, so no
+    ``[V, n]`` bool plane exists anywhere in the loop.
 
     ``mode``:
-    * ``"gs"`` (paper-faithful): operators applied sequentially within a
-      sweep — fewest sweeps, but every operator re-gathers the
-      freshly-updated chi (O(M) chi-sized collectives per sweep).
-    * ``"jacobi_packed"`` (beyond-paper, §Perf): chi lives bit-packed
-      through the whole while_loop; all operators read frontier bits out
-      of ONE replicated copy of the packed words per sweep — 32x fewer
-      collective bytes, no per-sweep pack/unpack round trip, word-wise
-      convergence test.  The freshly segment-reduced y is packed once per
-      sweep (JAX has no segmented OR, so the reduce lands in bool).  Same
-      fixpoint either way (monotone operator on a finite lattice).
+    * ``"gs"`` (paper-faithful ordering): operators applied sequentially
+      within a sweep, each reading the freshly-shrunk chi — fewest sweeps,
+      identical per-operator order (and therefore sweep counts) to the
+      bool-era engine, but O(M) chi-sized collectives per sweep on a mesh.
+    * ``"jacobi_packed"`` (beyond-paper, §Perf): all operators read
+      frontier bits out of ONE replicated copy of the packed words per
+      sweep — 32x fewer collective bytes.  Same fixpoint either way
+      (monotone operator on a finite lattice).
+
+    ``impl`` picks the segmented-OR lowering: ``"words"`` (word-wise XLA,
+    the CPU path), ``"kernel"`` (the blocked Pallas kernel over the
+    ``seg_*`` operand layout; ``interpret`` auto-enables off-TPU), or
+    ``None`` for backend auto-detection — kernel on accelerators, words on
+    CPU.  Operands without the blocked layout fall back to ``"words"``.
     """
+    from repro.kernels.segsum import kernel as segsum_kernel
+    from repro.kernels.segsum import ref as segsum_ref
+
     n = ops.init.shape[-1]
+    if impl is None:
+        impl = "words" if jax.default_backend() == "cpu" else "kernel"
+    # trace-ok: seg_win's None-ness is pytree *structure*, static under jit
+    if impl == "kernel" and ops.seg_win is None:
+        impl = "words"  # hand-built / abstract Operands: flat lists only
+    if impl not in ("words", "kernel"):
+        raise ValueError(f"unknown sparse impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
 
-    def propagate_from(frontier: jax.Array, m: int) -> jax.Array:
-        msgs = frontier[:, ops.edge_src[m]].astype(jnp.int8)  # [V, E_m]
-        y = jax.ops.segment_max(msgs.T, ops.edge_dst[m], num_segments=n)
-        return jnp.maximum(y, 0).T > 0  # [V, n]
-
-    if mode == "gs":
-        return _fixpoint(propagate_from, ops, max_sweeps, chi_spec, chi0)
-    if mode != "jacobi_packed":
-        raise ValueError(f"unknown sparse mode {mode!r}")
-
-    def propagate_bits(frontier_p: jax.Array, m: int) -> jax.Array:
+    def propagate(frontier_p: jax.Array, m: int) -> jax.Array:
+        if impl == "kernel":
+            bits = _edge_bits(frontier_p, ops.seg_src_b[m])  # [V, G, BE]
+            return segsum_kernel.segor_blocks(
+                bits.transpose(1, 2, 0), ops.seg_dst_b[m], ops.seg_win[m],
+                num_segments=n, interpret=interpret,
+            )
         msgs = _edge_bits(frontier_p, ops.edge_src[m])  # int8 [V, E_m]
-        y = jax.ops.segment_max(msgs.T, ops.edge_dst[m], num_segments=n)
-        return jnp.maximum(y, 0).T > 0  # [V, n]
+        return segsum_ref.segor_words(msgs, ops.edge_dst[m], n)
 
-    return _jacobi_packed_fixpoint(
-        propagate_bits, ops, max_sweeps, chi_spec, chi0
+    if mode not in ("gs", "jacobi_packed"):
+        raise ValueError(f"unknown sparse mode {mode!r}")
+    return _packed_edge_fixpoint(
+        propagate, ops, max_sweeps, chi_spec, chi0, jacobi=(mode != "gs")
     )
 
 
@@ -851,31 +972,40 @@ def solve_partitioned(
     """Vertex-cut partitioned engine (beyond-paper, EXPERIMENTS §Perf).
 
     Edges are pre-partitioned by destination chi-block
-    (:func:`make_partitioned_operands`), so every segment reduction is
-    block-local; chi lives bit-packed through the while_loop, and the ONLY
-    cross-shard traffic per sweep is replicating the n/8-byte packed words
-    chi already is (instead of M chi-sized all-gathers plus scatter
-    all-reduces — and, since ISSUE 5, instead of a pack/unpack kernel pair
-    per sweep).  Jacobi sweeps (all operators read the same frontier); same
-    fixpoint as the other engines.
+    (:func:`make_partitioned_operands`), so every segmented OR is
+    block-local and emits block-local *packed words* directly (the block
+    size is a 32-multiple by :func:`padded_node_count`, so block words
+    concatenate into the global word order with a reshape); chi lives
+    bit-packed through the while_loop, and the ONLY cross-shard traffic per
+    sweep is replicating the n/8-byte packed words chi already is (instead
+    of M chi-sized all-gathers plus scatter all-reduces — and, since
+    ISSUE 8, with no bool y plane or per-sweep pack either).  Jacobi sweeps
+    (all operators read the same frontier); same fixpoint as the other
+    engines.
     """
+    from repro.kernels.segsum import ref as segsum_ref
+
     v, n = ops.init.shape
     w = ops.edge_src_b[0].shape[0]
     n_local = n // w
+    if n_local % bitops.WORD:
+        raise ValueError(
+            "partitioned operands need 32-aligned blocks "
+            f"(n={n}, n_blocks={w}); build them via make_partitioned_operands"
+        )
+    nlw = n_local // bitops.WORD
 
     def propagate_blocks(frontier_p: jax.Array, m: int) -> jax.Array:
         def block(src_w, dst_w):
             msgs = _edge_bits(frontier_p, src_w)  # int8 [V, Eb]
-            yb = jax.ops.segment_max(
-                msgs.T, dst_w, num_segments=n_local
-            )  # [n_local, V]; pad rows (dst=n_local) dropped
-            return jnp.maximum(yb, 0)
+            # pad rows (dst = n_local) dropped by the segment reduce
+            return segsum_ref.segor_words(msgs, dst_w, n_local)  # [V, nlw]
 
-        yw = jax.vmap(block)(ops.edge_src_b[m], ops.edge_dst_b[m])
-        return yw.transpose(2, 0, 1).reshape(v, n) > 0  # [V, n], block-major
+        yw = jax.vmap(block)(ops.edge_src_b[m], ops.edge_dst_b[m])  # [W,V,nlw]
+        return yw.transpose(1, 0, 2).reshape(v, w * nlw)  # [V, nw] block-major
 
-    return _jacobi_packed_fixpoint(
-        propagate_blocks, ops, max_sweeps, chi_spec, chi0
+    return _packed_edge_fixpoint(
+        propagate_blocks, ops, max_sweeps, chi_spec, chi0, jacobi=True
     )
 
 

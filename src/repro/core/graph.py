@@ -20,6 +20,13 @@ import numpy as np
 
 from . import bitops
 
+# Hard budget on any [n, n] plane: past this, a dense adjacency (or the
+# transient dense build inside packed_adjacency) cannot be materialized at
+# all — construction raises MemoryError instead of OOMing the host, and
+# engine.cost refuses the dense-layout engine tier before it gets here
+# (ISSUE 8: the RDF workload runs where this is structurally impossible).
+DENSE_ADJ_MAX_BYTES = 2 << 30
+
 
 @dataclasses.dataclass
 class Graph:
@@ -137,7 +144,19 @@ class Graph:
     # dense / packed adjacency (MXU + Pallas engines)
     # ------------------------------------------------------------------ #
     def dense_adjacency(self, a: int, backward: bool = False) -> np.ndarray:
-        """bool[n, n] forward (or backward) adjacency matrix for label a."""
+        """bool[n, n] forward (or backward) adjacency matrix for label a.
+
+        Raises ``MemoryError`` when the [n, n] plane would exceed
+        ``DENSE_ADJ_MAX_BYTES`` — at RDF scale the dense tier does not
+        exist, and failing here (cheaply, before allocation) is what the
+        ``--rdf`` bench asserts.
+        """
+        if self.n_nodes * self.n_nodes > DENSE_ADJ_MAX_BYTES:
+            raise MemoryError(
+                f"dense [n, n] adjacency at n={self.n_nodes} needs "
+                f"{self.n_nodes * self.n_nodes} bytes > budget "
+                f"{DENSE_ADJ_MAX_BYTES}; use the edge-list engines"
+            )
         e = self.edges_for_label(a)
         m = np.zeros((self.n_nodes, self.n_nodes), dtype=bool)
         if backward:

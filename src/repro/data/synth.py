@@ -5,6 +5,10 @@
   characteristic low label diversity (~18 predicates over a dense instance
   graph), which is exactly the regime where the paper's L0/L1 iteration
   behaviour shows (Sect. 5.3).
+* :func:`lubm_stream` — the same schema as a one-triple-at-a-time
+  generator with O(department) live state, feeding the streaming RDF
+  ingest at node counts where the dense [n, n] tier cannot exist
+  (ISSUE 8).
 * :func:`dbpedia_like` — heterogeneous labels with Zipfian selectivity,
   mimicking DBpedia's high-selectivity predicates.
 * :func:`random_graph` / :func:`random_pattern` — property-test fodder.
@@ -72,6 +76,54 @@ def lubm_like(
                         (pubs[rng.integers(0, len(pubs))], "publicationAuthor", st)
                     )
     return Graph.from_triples(triples)
+
+
+def lubm_stream(
+    n_universities: int,
+    depts_per_uni: int = 4,
+    profs_per_dept: int = 5,
+    students_per_dept: int = 20,
+    pubs_per_prof: int = 3,
+    seed: int = 0,
+):
+    """LUBM-shaped triples as a *generator* — the RDF-scale workload source
+    (ISSUE 8).
+
+    Same entity schema and predicate mix as :func:`lubm_like`, but yields
+    ``(s, p, o)`` string triples one at a time with O(department) live
+    state: degree edges target a uniform university id (names are
+    deterministic, no list needed) and student co-authorship picks a
+    department-local publication.  Pipe into
+    :func:`repro.data.rdf.dump_stream` / :func:`~repro.data.rdf.load_stream`
+    to ingest node counts where the dense [n, n] tier cannot exist without
+    ever materializing a tuple-per-triple list.
+    """
+    rng = np.random.default_rng(seed)
+    for u in range(n_universities):
+        uni = f"Univ{u}"
+        for d in range(depts_per_uni):
+            dept = f"Dept{u}_{d}"
+            yield dept, "subOrganizationOf", uni
+            dept_pubs: list[str] = []
+            for p in range(profs_per_dept):
+                prof = f"Prof{u}_{d}_{p}"
+                yield prof, "worksFor", dept
+                deg = f"Univ{rng.integers(0, n_universities)}"
+                yield prof, "degreeFrom", deg
+                for k in range(pubs_per_prof):
+                    pub = f"Pub{u}_{d}_{p}_{k}"
+                    dept_pubs.append(pub)
+                    yield pub, "publicationAuthor", prof
+            for s in range(students_per_dept):
+                st = f"Student{u}_{d}_{s}"
+                yield st, "memberOf", dept
+                adv = f"Prof{u}_{d}_{rng.integers(0, profs_per_dept)}"
+                yield st, "advisor", adv
+                deg = f"Univ{rng.integers(0, n_universities)}"
+                yield st, "undergraduateDegreeFrom", deg
+                if rng.random() < 0.4 and dept_pubs:
+                    pub = dept_pubs[rng.integers(0, len(dept_pubs))]
+                    yield pub, "publicationAuthor", st
 
 
 def dbpedia_like(

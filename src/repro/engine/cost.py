@@ -23,13 +23,14 @@ operators, W = devices in the mesh):
   chi never inflates 8x in HBM), and on CPU it lowers to the word-wise XLA
   path instead of kernel emulation — far cheaper than interpreted
   ``packed`` though still behind ``sparse`` on most CPU-sized graphs.
-* ``sparse`` — gather + segment_max message passing: ``V * E`` messages at
-  scatter-regime cost, plus the per-operator AND-apply over ``V * n``.
-  Always feasible on one device.  Under Gauss–Seidel every operator
-  re-gathers the freshly-updated chi, so on a mesh it pays M chi-sized
-  collectives (``M * V * n`` bytes) per sweep.
-* ``jacobi_packed`` — same edge work, but all M operators read ONE
-  bit-packed broadcast of chi per sweep (``V * n / 8`` bytes); pays a
+* ``sparse`` / ``jacobi_packed`` — the segmented-OR sweep (ISSUE 8),
+  priced from BYTES MOVED: per sweep the engine streams ``E * (8 + V)``
+  bytes of edge ids + gathered frontier messages, and ``3 * M * V * n/8``
+  bytes of packed ``y`` words through the per-variable AND (write + read +
+  chi fold).  Always feasible on one device.  Under Gauss–Seidel every
+  operator re-gathers the freshly-updated packed chi, so on a mesh it pays
+  M packed-chi collectives (``M * V * n/8`` bytes) per sweep;
+  ``jacobi_packed`` reads ONE bit-packed broadcast per sweep but pays a
   ~2x sweep-count inflation (Jacobi vs Gauss–Seidel, measured in
   ``configs/dualsim_base.py``).
 * ``partitioned`` — jacobi_packed with destination-partitioned edge blocks:
@@ -40,6 +41,14 @@ operators, W = devices in the mesh):
 Communication terms enter only when ``n_devices > 1`` — on a single device
 there is no collective traffic and the model must reduce to the PR-1
 single-shard model exactly.
+
+Feasibility is a HARD gate, not a preference: any engine whose *build*
+path materializes an ``[n, n]`` plane — dense itself, and the packed tier,
+whose ``graph.packed_adjacency`` packs through a transient dense build —
+is refused outright once ``n * n`` exceeds the byte budget
+(``graph.DENSE_ADJ_MAX_BYTES``).  Before ISSUE 8 the model only priced the
+*resident* operand bytes, so it could select an engine whose operands then
+OOMed at build time.
 """
 from __future__ import annotations
 
@@ -47,7 +56,7 @@ import dataclasses
 
 import jax
 
-from repro.core.graph import Graph
+from repro.core.graph import DENSE_ADJ_MAX_BYTES, Graph
 from repro.core.soi import CompiledSOI
 
 ENGINES = (
@@ -62,12 +71,38 @@ C_PACKED_INTERPRET = 256.0  # per word under interpret mode (CPU backend)
 C_PACKED_FUSED = 1.0  # per word, fused kernel: no unpack/gather chain
 C_PACKED_FUSED_CPU = 24.0  # per word, word-wise XLA lowering (no kernel)
 PACKED_LAUNCH = 65536.0  # per-operator kernel launch overhead
-C_SPARSE = 4.0  # per edge message (gather + segment_max)
-C_APPLY = 0.5  # per chi element per operator (AND-apply)
+C_SPARSE = 4.0  # per edge message (admission envelope only, see below)
+C_APPLY = 0.5  # per chi element per operator (admission envelope only)
+C_SEGOR_BYTE = 1.0  # per byte moved through the segmented-OR sweep
 C_COMM = 8.0  # per byte of cross-shard collective traffic
 JACOBI_SWEEP_FACTOR = 2.0  # Jacobi needs ~2x the sweeps of Gauss–Seidel
 DENSE_MAX_BYTES = 2 << 30  # stacked bool[M, n, n] adjacency budget
 PACKED_MAX_BYTES = 2 << 30
+# any single [n, n] plane past this cannot be BUILT (graph.dense_adjacency
+# raises MemoryError) — shared with the data layer so the model's hard gate
+# and the constructor's guard can never disagree
+DENSE_TIER_MAX_BYTES = DENSE_ADJ_MAX_BYTES
+
+
+def dense_tier_feasible(n: int) -> bool:
+    """Whether any ``[n, n]`` operand plane may be materialized at all.
+
+    Gates dense AND both packed engines: ``graph.packed_adjacency`` packs
+    through a transient dense ``[n, n]`` build, so the packed tier is just
+    as impossible past the budget even though its *resident* operand is 32x
+    smaller.
+    """
+    return n * n <= DENSE_TIER_MAX_BYTES
+
+
+def segor_sweep_cost(v: int, n: int, m: int, e: int) -> float:
+    """Bytes-moved model of one segmented-OR Gauss–Seidel sweep.
+
+    ``E * (8 + V)`` bytes of edge ids (src + dst int32) and int8 frontier
+    messages, plus ``3 * M * V * n/8`` bytes of packed ``y`` words (written
+    by the segmented OR, read by the per-variable AND, folded into chi).
+    """
+    return C_SEGOR_BYTE * (e * (8.0 + v) + 3.0 * m * v * (n / 8.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,35 +141,39 @@ def estimate_costs(
     multi = n_devices > 1
 
     costs: dict[str, float] = {}
+    # hard gate first: past the [n, n] budget no dense-layout engine can
+    # even BUILD its operands (m > 0 — an operator-free SOI builds nothing)
+    tier_ok = m == 0 or dense_tier_feasible(n)
     dense_bytes = m * n * n
     costs["dense"] = (
         float("inf")
-        if dense_bytes > DENSE_MAX_BYTES
+        if not tier_ok or dense_bytes > DENSE_MAX_BYTES
         else v * n * n * m * C_DENSE
     )
     packed_bytes = m * n * n_words * 4
     c_packed = C_PACKED_INTERPRET if backend == "cpu" else C_PACKED
     costs["packed"] = (
         float("inf")
-        if packed_bytes > PACKED_MAX_BYTES
+        if not tier_ok or packed_bytes > PACKED_MAX_BYTES
         else v * n * n_words * m * c_packed + m * PACKED_LAUNCH
     )
     c_fused = C_PACKED_FUSED_CPU if backend == "cpu" else C_PACKED_FUSED
     costs["packed_fused"] = (
         float("inf")
-        if packed_bytes > PACKED_MAX_BYTES
+        if not tier_ok or packed_bytes > PACKED_MAX_BYTES
         else v * n * n_words * m * c_fused + m * PACKED_LAUNCH
     )
-    edge_work = v * e * C_SPARSE + v * n * m * C_APPLY
-    # Gauss–Seidel re-gathers chi per operator: M chi-sized collectives/sweep
-    sparse_comm = m * v * n * C_COMM if multi else 0.0
-    costs["sparse"] = edge_work + sparse_comm
+    sweep = segor_sweep_cost(v, n, m, e)
+    # Gauss–Seidel re-gathers the packed chi per operator: M packed-chi
+    # collectives (n/8 bytes each) per sweep
+    sparse_comm = m * v * (n / 8.0) * C_COMM if multi else 0.0
+    costs["sparse"] = sweep + sparse_comm
     # Jacobi: ONE n/8-byte packed broadcast serves all M operators per sweep,
     # at ~2x the sweep count
     bcast_comm = v * (n / 8.0) * C_COMM if multi else 0.0
-    costs["jacobi_packed"] = JACOBI_SWEEP_FACTOR * (edge_work + bcast_comm)
+    costs["jacobi_packed"] = JACOBI_SWEEP_FACTOR * (sweep + bcast_comm)
     costs["partitioned"] = (
-        JACOBI_SWEEP_FACTOR * (edge_work / n_devices + bcast_comm)
+        JACOBI_SWEEP_FACTOR * (sweep / n_devices + bcast_comm)
         if multi
         else float("inf")  # no mesh: pure overhead over jacobi_packed
     )

@@ -182,14 +182,18 @@ class CompiledPlan:
                 dualsim.solve_packed_fused,
                 impl=("words" if backend == "cpu" else "kernel"),
             )
-        elif engine == "sparse":
-            self.operands = dualsim.make_sparse_operands(self.csoi, db, adj_cache)
-            solver = dualsim.solve_sparse
-        elif engine == "jacobi_packed":
+        elif engine in ("sparse", "jacobi_packed"):
+            # both sparse modes run the segmented-OR sweep over bit-packed
+            # chi (ISSUE 8).  The lowering is resolved here like
+            # packed_fused's: blocked Pallas kernel on accelerators, the
+            # word-wise XLA path on CPU — plans honor an Engine-level
+            # ``backend`` override rather than the process default the
+            # solver's auto-detection would consult.
             self.operands = dualsim.make_sparse_operands(self.csoi, db, adj_cache)
             solver = functools.partial(
                 dualsim.solve_sparse,
-                mode="jacobi_packed",
+                mode=("jacobi_packed" if engine == "jacobi_packed" else "gs"),
+                impl=("words" if backend == "cpu" else "kernel"),
                 chi_spec=self.chi_spec,
             )
         elif engine == "partitioned":
@@ -215,9 +219,10 @@ class CompiledPlan:
         self._warm: dict = {}
         self.last_sweeps: int | None = None
         # engines whose while_loop state is bit-packed take constants and
-        # warm starts as uint32 words; bool chi never touches the device
-        self._packed_chi = engine in ("packed_fused", "jacobi_packed",
-                                      "partitioned")
+        # warm starts as uint32 words; bool chi never touches the device.
+        # Since ISSUE 8 that is every edge-list engine — sparse included.
+        self._packed_chi = engine in ("packed_fused", "sparse",
+                                      "jacobi_packed", "partitioned")
 
         self.metrics = PlanMetrics()
         scatter = jnp.asarray(self._scatter_ids)

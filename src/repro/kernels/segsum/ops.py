@@ -1,11 +1,19 @@
-"""Public wrapper: host-side prepare + kernel call in one step."""
+"""Public wrappers: host-side prepare + kernel call in one step."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import kernel as _kernel
 from . import ref as _ref
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Default to interpret mode off-TPU so the kernels run everywhere."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() == "cpu"
 
 
 def segsum(
@@ -34,4 +42,45 @@ def segsum(
     return _kernel.segsum_blocks(
         jnp.asarray(vb), jnp.asarray(sb), jnp.asarray(win),
         num_segments=num_segments, block_n=block_n, interpret=interpret,
+    )
+
+
+def segor(
+    bits: np.ndarray,
+    seg_ids: np.ndarray,
+    num_segments: int,
+    *,
+    block_e: int = 256,
+    block_n: int = 256,
+    interpret: bool | None = None,
+    impl: str = "kernel",
+):
+    """Segmented OR of 0/1 ``bits [V, E]`` over destination ids, packed.
+
+    Returns ``uint32 [V, ceil(num_segments / 32)]`` with trailing pad bits
+    zero.  ``impl`` selects the Pallas kernel (``"kernel"``, interpret mode
+    auto-enabled off-TPU), the word-wise XLA lowering (``"words"``), or the
+    ``bitops.pack``-based oracle (``"ref"``).
+    """
+    bits = np.asarray(bits)
+    seg_ids = np.asarray(seg_ids, np.int32)
+    if impl == "ref":
+        return _ref.segor_ref(jnp.asarray(bits), jnp.asarray(seg_ids),
+                              num_segments)
+    if impl == "words":
+        return _ref.segor_words(jnp.asarray(bits), jnp.asarray(seg_ids),
+                                num_segments)
+    if impl != "kernel":
+        raise ValueError(f"unknown segor impl: {impl!r}")
+    idx_b, seg_b, win, _ = _kernel.prepare_segor(
+        seg_ids, num_segments, block_e=block_e, block_n=block_n
+    )
+    if bits.shape[1]:
+        vals_b = bits[:, idx_b].transpose(1, 2, 0)  # [G, BE, V]
+    else:  # no edges: all-pad blocks, nothing to gather
+        vals_b = np.zeros(idx_b.shape + (bits.shape[0],), bits.dtype)
+    return _kernel.segor_blocks(
+        jnp.asarray(vals_b), jnp.asarray(seg_b), jnp.asarray(win),
+        num_segments=num_segments, block_n=block_n,
+        interpret=_resolve_interpret(interpret),
     )

@@ -1,8 +1,24 @@
-"""Oracle for the tiled segment-sum kernel: ``jax.ops.segment_sum`` over
-sorted segment ids."""
+"""Oracles and XLA lowerings for the tiled segment kernels.
+
+* :func:`segsum_ref` — ``jax.ops.segment_sum`` over sorted segment ids
+  (oracle for the windowed segment-sum kernel).
+* :func:`segor_ref` — einsum-free oracle for the segmented-OR primitive:
+  per-segment OR of frontier bits, returned bit-packed.  Trusted path:
+  ``segment_max`` + :func:`repro.core.bitops.pack`.
+* :func:`segor_words` — word-wise XLA lowering of segmented OR for
+  backends without a compiled Pallas path (the ``bitmm_apply_words``
+  pattern from PR 5): the reduced 0/1 plane goes straight from the segment
+  reduce into ``uint32`` words with shifts and an OR-reduce — no
+  ``reduce_sum`` (the signature primitive of ``bitops.pack``) and no bool
+  plane ever materializes, which is what lets the edge-list engines carry
+  bit-packed chi through their whole ``while_loop`` (DESIGN.md Sect. 12).
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
 
 
 def segsum_ref(vals, seg_ids, num_segments: int):
@@ -10,3 +26,39 @@ def segsum_ref(vals, seg_ids, num_segments: int):
     return jax.ops.segment_sum(
         vals, seg_ids, num_segments=num_segments, indices_are_sorted=True
     )
+
+
+def segor_ref(bits, seg_ids, num_segments: int):
+    """Segmented OR, packed: ``out[v, :] = pack(OR_{e: seg[e]=s} bits[v, e])``.
+
+    ``bits``: 0/1 int [V, E]; ``seg_ids``: int32 [E] (ids >= num_segments
+    are dropped — the pad-row convention of every edge layout); returns
+    ``uint32 [V, ceil(num_segments/32)]``.  Oracle only: packs through
+    ``bitops.pack``, the trusted (but ``reduce_sum``-based) path.
+    """
+    y = jax.ops.segment_max(bits.T, seg_ids, num_segments=num_segments)
+    return bitops.pack((jnp.maximum(y, 0) > 0).T)
+
+
+def segor_words(bits, seg_ids, num_segments: int):
+    """Word-wise XLA lowering of :func:`segor_ref` — same contract.
+
+    The segment reduce lands in an int 0/1 plane which is packed by a
+    shift + OR-reduce over 32-lane groups: no ``reduce_sum``, no bool
+    plane, so the edge-list engines' while bodies stay clean under the
+    ``tools.reprolint.dynamic`` audit.  Pad bits are structurally zero
+    (the node axis is zero-padded up to a word multiple before packing).
+    """
+    v = bits.shape[0]
+    y = jax.ops.segment_max(bits.T, seg_ids, num_segments=num_segments)
+    y = jnp.maximum(y, 0).astype(jnp.uint32)  # [n, V] 0/1
+    nw = bitops.packed_width(num_segments)
+    pad = nw * bitops.WORD - num_segments
+    if pad:
+        y = jnp.concatenate([y, jnp.zeros((pad, v), y.dtype)])
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, bitops.WORD, 1), 1)
+    grouped = y.reshape(nw, bitops.WORD, v) << shifts
+    words = jax.lax.reduce(
+        grouped, jnp.uint32(0), jax.lax.bitwise_or, (1,)
+    )  # [nw, V]
+    return words.T

@@ -134,7 +134,7 @@ def test_optimized_engines_same_fixpoint(seed):
     assert np.array_equal(np.asarray(chi_gs), np.asarray(chi_j))
     ops_p = dualsim.make_partitioned_operands(c, db, n_blocks=4)
     chi_p, _ = dualsim.solve_partitioned(ops_p)
-    assert np.array_equal(np.asarray(chi_gs), np.asarray(chi_p))
+    assert np.array_equal(np.asarray(chi_gs), np.asarray(chi_p)[:, :n])
 
 
 def test_partitioned_operands_layout():
@@ -144,7 +144,7 @@ def test_partitioned_operands_layout():
     pat = synth.random_pattern(2, 2, 2, seed=3)
     c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
     ops = dualsim.make_partitioned_operands(c, db, n_blocks=8)
-    n_local = 64 // 8
+    n_local = dualsim.padded_node_count(64, 8) // 8  # 32-aligned per block
     for src_b, dst_b in zip(ops.edge_src_b, ops.edge_dst_b):
         assert src_b.shape == dst_b.shape
         d = np.asarray(dst_b)
@@ -160,7 +160,8 @@ def test_partitioned_operands_pad_unaligned_graph():
     c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
     ops = dualsim.make_partitioned_operands(c, db, n_blocks=8)
     n_pad = dualsim.padded_node_count(61, 8)
-    assert n_pad == 64 and ops.init.shape[-1] == n_pad
+    # each of the 8 blocks is padded to a 32-bit word multiple (Sect. 12)
+    assert n_pad == 256 and ops.init.shape[-1] == n_pad
     assert not np.asarray(ops.init)[:, 61:].any()  # pad columns dead
     chi_p, _ = dualsim.solve_partitioned(ops)
     assert not np.asarray(chi_p)[:, 61:].any()
@@ -263,6 +264,23 @@ def test_packed_fused_impls_match():
     assert int(it_k) == int(it_w)
 
 
+@pytest.mark.parametrize("mode", ["gs", "jacobi_packed"])
+def test_sparse_impls_match(mode):
+    """Both segmented-OR lowerings (blocked Pallas kernel in interpret
+    mode, word-wise XLA) drive the edge-list engine to the worklist
+    fixpoint in the same sweep count, in both sweep orders."""
+    db = synth.random_graph(77, 3, 260, seed=21)  # 77 % 32 != 0
+    pat = synth.random_pattern(3, 3, 4, seed=21)
+    c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
+    ref, _ = dualsim.solve_worklist(c, db)
+    ops = dualsim.make_sparse_operands(c, db)
+    chi_k, it_k = dualsim.solve_sparse(ops, mode=mode, impl="kernel")
+    chi_w, it_w = dualsim.solve_sparse(ops, mode=mode, impl="words")
+    assert np.array_equal(np.asarray(chi_k), ref)
+    assert np.array_equal(np.asarray(chi_w), ref)
+    assert int(it_k) == int(it_w)
+
+
 # --------------------------------------------------------------------- #
 # packed-chi invariants: the while_loop never packs or unpacks (ISSUE 5).
 # The jaxpr machinery lives in tools.reprolint.dynamic so the same check
@@ -292,16 +310,23 @@ def test_packed_fused_while_body_has_no_pack_or_unpack():
         assert rl_dynamic.check_fused_body(body) == []
 
 
-def test_packed_state_engines_carry_words_not_bools():
-    """jacobi_packed / partitioned also iterate a packed uint32 chi state
-    (their per-sweep y pack is data freshly produced by the segment reduce;
-    chi itself never round-trips)."""
-    db = synth.random_graph(48, 2, 120, seed=4)
+def test_edge_engines_while_body_is_pack_free():
+    """ISSUE 8 acceptance: every edge-list engine (sparse gs,
+    jacobi_packed — words and kernel lowerings — and partitioned) carries
+    packed uint32 chi through the while_loop with NO per-sweep pack
+    (``reduce_sum``) and no bool ``[V, n]`` plane; ``y`` arrives already
+    packed from the segmented-OR primitive."""
+    db = synth.random_graph(70, 2, 200, seed=4)  # 70 % 32 != 0
     pat = synth.random_pattern(3, 2, 3, seed=4)
     c = soi.compile_soi(dualsim.pattern_graph_soi(pat), db)
+    ops_s = dualsim.make_sparse_operands(c, db)
     cases = [
-        (dualsim.make_sparse_operands(c, db),
-         lambda o: dualsim.solve_sparse(o, mode="jacobi_packed")),
+        (ops_s, lambda o: dualsim.solve_sparse(o, mode="gs", impl="words")),
+        (ops_s, lambda o: dualsim.solve_sparse(o, mode="gs", impl="kernel")),
+        (ops_s, lambda o: dualsim.solve_sparse(o, mode="jacobi_packed",
+                                               impl="words")),
+        (ops_s, lambda o: dualsim.solve_sparse(o, mode="jacobi_packed",
+                                               impl="kernel")),
         (dualsim.make_partitioned_operands(c, db, n_blocks=4),
          dualsim.solve_partitioned),
     ]
@@ -309,7 +334,7 @@ def test_packed_state_engines_carry_words_not_bools():
         bodies = rl_dynamic._while_bodies(solve, ops)
         assert bodies
         for body in bodies:
-            assert rl_dynamic.check_carried_state(body) == []
+            assert rl_dynamic.check_edge_body(body) == []
 
 
 def test_dynamic_cross_check_runs_clean():

@@ -134,6 +134,30 @@ def test_cost_model_small_graph_stays_single_shard_on_mesh():
     assert est.engine == "dense"
 
 
+def test_dense_tier_hard_gate_matches_graph_budget():
+    """ISSUE 8: past DENSE_ADJ_MAX_BYTES every dense-layout tier (dense,
+    packed, packed_fused) is hard-infeasible in the cost model — never
+    merely expensive — because operand *construction* would raise.  The
+    smallest infeasible n makes the per-sweep cost favor the dense tier,
+    so only the gate (not pricing) can exclude it."""
+    from repro.core.graph import DENSE_ADJ_MAX_BYTES
+
+    n = int(DENSE_ADJ_MAX_BYTES ** 0.5) + 1  # first n with n*n > budget
+    g = synth.random_graph(n_nodes=n, n_labels=1, n_edges=10, seed=0)
+    est = choose_engine(g, _compiled("{ ?a p0 ?b }", g))
+    for tier in ("dense", "packed", "packed_fused"):
+        assert est.costs[tier] == float("inf"), tier
+    assert est.engine in ("sparse", "jacobi_packed")
+    # the gate mirrors the construction-time guard exactly
+    with pytest.raises(MemoryError):
+        g.dense_adjacency(0)
+    with pytest.raises(MemoryError):
+        g.packed_adjacency(0)
+    # one node fewer: construction is allowed again
+    g2 = synth.random_graph(n_nodes=n - 1, n_labels=1, n_edges=10, seed=0)
+    assert g2.dense_adjacency(0).shape == (n - 1, n - 1)
+
+
 # --------------------------------------------------------------------- #
 # batcher
 # --------------------------------------------------------------------- #

@@ -119,6 +119,37 @@ def test_resume_equals_worklist_fixed_seeds(seed):
     _check_resume_matches_worklist(seed)
 
 
+def test_blocked_layout_patch_keeps_shapes_and_kernel_resumes():
+    """Churn through ``patch_operands`` on the edge-list-packed layout
+    (ISSUE 8): the blocked segmented-OR operands keep their superseded
+    shapes (the zero-retrace precondition, mirroring EDGE_PAD for the flat
+    lists) and the kernel-lowering warm resume stays bit-identical to a
+    cold worklist solve."""
+    rng = np.random.default_rng(6)
+    g = synth.random_graph(70, 3, 220, seed=6)  # 70 % 32 != 0
+    q = _random_query(rng, 3, g.node_names)
+    s = soi.build_soi(q)
+    c = soi.compile_soi(s, g)
+    ops = dualsim.make_sparse_operands(c, g)
+    chi_prev = np.asarray(dualsim.solve_sparse(ops, mode="gs",
+                                               impl="kernel")[0])
+    for _ in range(3):
+        g, ins_labels = _mutate(rng, g)
+        c = soi.compile_soi(s, g)
+        shapes = [tuple(a.shape) for a in ops.seg_src_b]
+        wins = [tuple(w.shape) for w in ops.seg_win]
+        ops = dualsim.patch_operands(ops, c, g, set(range(g.n_labels)))
+        assert [tuple(a.shape) for a in ops.seg_src_b] == shapes
+        assert [tuple(w.shape) for w in ops.seg_win] == wins
+        chi0 = chi_prev.copy()
+        chi0[dualsim.destabilized_rows(c, set(ins_labels))] = True
+        warm, _ = dualsim.solve_sparse(ops, mode="gs", impl="kernel",
+                                       chi0=chi0)
+        ref, _ = dualsim.solve_worklist(c, g)
+        assert np.array_equal(np.asarray(warm), ref)
+        chi_prev = np.asarray(warm)
+
+
 def test_destabilized_rows_closure():
     # v0 -p0-> v1 -p1-> v2: inserting p1 edges may grow every row that
     # (transitively) depends on a p1 operator, but only those

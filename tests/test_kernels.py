@@ -205,3 +205,90 @@ def test_segsum_block_boundary_ids():
     out = sops.segsum(vals, ids, n, block_n=bn, interpret=True)
     exp = sops.segsum(vals, ids, n, use_ref=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp))
+
+
+# --------------------------------------------------------------------- #
+# segor: segmented OR with bit-packed output (ISSUE 8)
+# --------------------------------------------------------------------- #
+def _segor_case(seed, v, e, n, density=0.4):
+    rng = np.random.default_rng(seed)
+    bits = (rng.random((v, e)) < density).astype(np.int8)
+    ids = rng.integers(0, n, e).astype(np.int32) if e else np.zeros(0, np.int32)
+    return bits, ids
+
+
+def _segor_truth(bits, ids, n):
+    v = bits.shape[0]
+    y = np.zeros((v, n), bool)
+    for e, s in enumerate(ids):
+        y[:, s] |= bits[:, e].astype(bool)
+    return y
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 100, 257, 300, 1000])
+@pytest.mark.parametrize("v", [1, 5, 9])
+def test_segor_shape_sweep(n, v):
+    bits, ids = _segor_case(n * 100 + v, v, 4 * n, n)
+    truth = _segor_truth(bits, ids, n)
+    out_k = sops.segor(bits, ids, n, interpret=True)
+    out_w = sops.segor(bits, ids, n, impl="words")
+    out_r = sops.segor(bits, ids, n, impl="ref")
+    np.testing.assert_array_equal(
+        bitops.unpack_np(np.asarray(out_k), n), truth
+    )
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_w))
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    # trailing pad bits of the last word never turn on (RL2)
+    if n % 32:
+        mask = np.uint32(0xFFFFFFFF) << np.uint32(n % 32)
+        assert not (np.asarray(out_k)[:, -1] & mask).any()
+        assert not (np.asarray(out_w)[:, -1] & mask).any()
+
+
+@pytest.mark.parametrize("impl", ["kernel", "words", "ref"])
+def test_segor_empty_edges(impl):
+    """Zero edges: every lowering returns the all-zero word plane."""
+    bits = np.zeros((3, 0), np.int8)
+    out = sops.segor(bits, np.zeros(0, np.int32), 70, impl=impl,
+                     interpret=True)
+    assert out.shape == (3, 3) and not np.asarray(out).any()
+
+
+def test_segor_duplicate_destinations():
+    """Many edges into one destination OR together (segment semantics)."""
+    n, e = 40, 200
+    bits = np.ones((2, e), np.int8)
+    ids = np.full(e, 7, np.int32)
+    out = sops.segor(bits, ids, n, interpret=True)
+    truth = np.zeros((2, n), bool)
+    truth[:, 7] = True
+    np.testing.assert_array_equal(bitops.unpack_np(np.asarray(out), n), truth)
+
+
+def test_segor_block_boundary_ids():
+    """Destination ids at window boundaries exercise the block-split and
+    first-visit-init paths of the blocked kernel."""
+    n, bn = 600, 256
+    ids = np.asarray([0, 255, 256, 257, 511, 512, 599] * 10, np.int32)
+    bits = (np.arange(2 * len(ids)).reshape(2, -1) % 3 == 0).astype(np.int8)
+    out = sops.segor(bits, ids, n, block_n=bn, interpret=True)
+    exp = sops.segor(bits, ids, n, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_segor_small_block_e():
+    """block_e smaller than the edge count forces multi-block windows whose
+    partial ORs accumulate into the same output row."""
+    bits, ids = _segor_case(11, 4, 900, 50, density=0.2)
+    out = sops.segor(bits, ids, 50, block_e=64, block_n=32, interpret=True)
+    exp = sops.segor(bits, ids, 50, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_prepare_segor_rejects_out_of_range_ids():
+    """prepare_segor consumes RAW edges only: a seg id >= num_segments
+    (e.g. an EDGE_PAD sentinel) would alias a live bit after packing."""
+    from repro.kernels.segsum import kernel as skern
+
+    with pytest.raises(ValueError, match="seg_ids"):
+        skern.prepare_segor(np.asarray([0, 5, 8], np.int32), 8)

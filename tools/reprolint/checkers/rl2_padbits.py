@@ -15,8 +15,10 @@ which implement the masking), this checker flags:
 * OR-ing a packed value with an all-ones constant.
 
 "Packed" is a lightweight per-function taint seeded at ``pack`` /
-``pack_np`` / ``.init_packed`` / ``.adj_packed`` call sites and cleared by
-``unpack`` / ``popcount`` / ``any_set`` (their results are not word arrays).
+``pack_np`` / the segmented-OR entry points (``segor`` / ``segor_words`` /
+``segor_ref`` / ``segor_blocks``, whose results are packed words — ISSUE 8)
+/ ``.init_packed`` / ``.adj_packed`` call sites and cleared by ``unpack`` /
+``popcount`` / ``any_set`` (their results are not word arrays).
 
 Escape hatch: ``# packed-ok: <reason>``.
 """
@@ -31,7 +33,11 @@ from tools.reprolint.core import Checker, Context, Finding
 
 EXEMPT_PATH_PARTS = ("core/bitops.py", "kernels/")
 
-TAINT_CALL_SUFFIXES = ("pack", "pack_np")
+TAINT_CALL_SUFFIXES = (
+    "pack", "pack_np",
+    # segmented-OR primitives return packed words (ISSUE 8)
+    "segor", "segor_words", "segor_ref", "segor_blocks",
+)
 TAINT_ATTRS = ("init_packed", "adj_packed", "chi_packed")
 # Calls whose result leaves the packed-word domain (taint sinks).
 CLEARING_SUFFIXES = ("unpack", "unpack_np", "popcount", "any_set", "leq")

@@ -6,12 +6,19 @@ cross-check: trace each packed engine once on a small synthetic instance and
 assert the ``lax.while_loop`` body
 
 * contains none of the primitives ``bitops.pack`` / ``unpack`` lower to
-  (``reduce_sum`` / ``shift_left`` / ``shift_right_*``) — fused engine only;
-  jacobi_packed/partitioned legitimately pack the freshly-reduced ``y`` per
-  sweep (DESIGN.md Sect. 9),
+  (``reduce_sum`` / ``shift_left`` / ``shift_right_*``) — fused engine only,
 * never materializes a bool ``[V, n]`` chi plane
   (``convert_element_type`` to bool with rank >= 2),
 * carries ``uint32`` words, not bools, as loop state.
+
+Since ISSUE 8 the edge-list engines (sparse gs / jacobi_packed /
+partitioned) get their own body check (:func:`check_edge_body`): ``y``
+arrives already packed from the segmented-OR primitive, so the while body
+must contain no ``reduce_sum`` (the summing half of ``bitops.pack``) and no
+bool-plane convert.  Shifts remain legal there — the word-wise segor
+lowering shifts freshly-reduced *words* into place and ``_edge_bits``
+extracts single frontier bits; neither is a chi round-trip (DESIGN.md
+Sect. 12).
 
 Used two ways: imported by ``tests/test_dualsim_core.py`` (tier-1) and run
 standalone in the CI ``reprolint`` job::
@@ -29,6 +36,11 @@ FUSED_FORBIDDEN = {
     "shift_right_logical",  # unpack's per-bit shifts
     "shift_right_arithmetic",
 }
+
+# Edge-list engines: shifts are load-bearing (bit extraction / word
+# assembly on fresh segment-reduce output), but any reduce_sum means a
+# bitops.pack snuck back into the sweep.
+EDGE_FORBIDDEN = {"reduce_sum"}
 
 
 def sub_jaxprs(param):
@@ -123,6 +135,23 @@ def check_fused_body(body) -> list[str]:
     return violations
 
 
+def check_edge_body(body) -> list[str]:
+    """Edge-list engines (ISSUE 8): packed carry, no per-sweep pack
+    (``reduce_sum``), no bool chi/y plane anywhere in the while body."""
+    violations = check_carried_state(body)
+    used = primitive_names(body) & EDGE_FORBIDDEN
+    if used:
+        violations.append(
+            f"per-sweep pack primitives in edge while body: {sorted(used)}"
+        )
+    converts = bool_plane_converts(body)
+    if converts:
+        violations.append(
+            f"{len(converts)} convert_element_type(bool) plane(s) in edge while body"
+        )
+    return violations
+
+
 def check_packed_engines(seed: int = 3) -> list[str]:
     """Trace every packed engine once; return all invariant violations."""
     from repro.core import dualsim, soi
@@ -143,9 +172,16 @@ def check_packed_engines(seed: int = 3) -> list[str]:
     db2 = synth.random_graph(48, 2, 120, seed=seed + 1)
     pat2 = synth.random_pattern(3, 2, 3, seed=seed + 1)
     c2 = soi.compile_soi(dualsim.pattern_graph_soi(pat2), db2)
+    ops2 = dualsim.make_sparse_operands(c2, db2)
     cases = [
-        ("jacobi_packed", dualsim.make_sparse_operands(c2, db2),
-         lambda o: dualsim.solve_sparse(o, mode="jacobi_packed")),
+        ("sparse-gs/words", ops2,
+         lambda o: dualsim.solve_sparse(o, mode="gs", impl="words")),
+        ("sparse-gs/kernel", ops2,
+         lambda o: dualsim.solve_sparse(o, mode="gs", impl="kernel")),
+        ("jacobi_packed/words", ops2,
+         lambda o: dualsim.solve_sparse(o, mode="jacobi_packed", impl="words")),
+        ("jacobi_packed/kernel", ops2,
+         lambda o: dualsim.solve_sparse(o, mode="jacobi_packed", impl="kernel")),
         ("partitioned", dualsim.make_partitioned_operands(c2, db2, n_blocks=4),
          dualsim.solve_partitioned),
     ]
@@ -154,7 +190,7 @@ def check_packed_engines(seed: int = 3) -> list[str]:
         if not bodies:
             violations.append(f"{name}: no while_loop found")
         for body in bodies:
-            violations.extend(f"{name}: {v}" for v in check_carried_state(body))
+            violations.extend(f"{name}: {v}" for v in check_edge_body(body))
     return violations
 
 
