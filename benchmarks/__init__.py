@@ -1,0 +1,5 @@
+"""Benchmark package: paper tables, engine/serve trajectories, and the
+ERT-style machine probe (``benchmarks.roofline``).  A real package (not a
+namespace dir) so ``python -m benchmarks.run``, the perf gate's replay
+subprocesses, and the import-cleanliness test all resolve the same modules.
+"""

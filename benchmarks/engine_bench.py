@@ -38,9 +38,12 @@ contract of benchmarks/run.py) and written to results/bench/engine.json:
   >= 2x fused-over-packed sweep throughput; the run also appends a summary
   record (req/s, warm/cold, fused-vs-packed speedup) to the top-level
   ``BENCH_engine.json`` so the perf trajectory is visible across PRs.
-  ``--fused-only`` runs just this section and gates on the bar (the CI
-  perf-smoke step); ``--tiny`` runs without it skip the section so a CI
-  pipeline times the cross-engine sweep exactly once.
+  ``--fused-only`` runs just this section (the CI perf-smoke replay);
+  the 2x bar — and the per-metric regression bands over the appended
+  trajectory — are enforced afterwards by ``python -m tools.perfgate
+  --check``, not by this script's exit code.  ``--tiny`` runs without it
+  skip the section so a CI pipeline times the cross-engine sweep exactly
+  once.
 * ``rdf`` (``--rdf``) — the DBpedia/LUBM-scale RDF workload (ISSUE 8): a
   LUBM-shaped N-Triples file is stream-generated
   (``synth.lubm_stream`` -> ``rdf.dump_stream``), ingested back through the
@@ -343,19 +346,20 @@ def append_bench_summary(entry: dict) -> None:
     appended records (regressions were invisible while BENCH history
     stayed empty).  CI's uploaded copy is a per-run snapshot on top of
     that history, not the accumulation mechanism itself.
+
+    The write goes through ``tools.perfgate.history`` (atomic temp-file
+    replace, never drops earlier records) and every record is stamped with
+    the machine fingerprint so the perf gate compares each machine only
+    against its own past.
     """
-    hist = []
-    if os.path.exists(BENCH_TOP):
-        try:
-            with open(BENCH_TOP) as f:
-                hist = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            hist = []
-    if not isinstance(hist, list):
-        hist = [hist]
-    hist.append(entry)
-    with open(BENCH_TOP, "w") as f:
-        json.dump(hist, f, indent=1, default=str)
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from repro.engine.machine import machine_fingerprint
+    from tools.perfgate.history import append_record
+
+    entry.setdefault("machine", machine_fingerprint())
+    append_record(BENCH_TOP, entry)
 
 
 def mutation(graph, *, engine: str = "auto", rates=(0.001, 0.01),
@@ -500,22 +504,20 @@ def main() -> None:
     if args.fused_only or not args.tiny:
         fused = packed_fused(graph, reps=3 if args.tiny else 5)
         fused["n_devices"] = max(args.devices, 1)
+        # informational only: the 2x fused-over-packed and 0.5x vs-XLA bars
+        # are now enforced (as absolute floors, plus relative regression
+        # bands) by `python -m tools.perfgate --check` over the appended
+        # BENCH_engine.json record — not by an exit code here
         ok_fused = fused["fused_speedup"] >= 2.0
-        # sanity floor on the honest ratio: vs the packed engine's pure-XLA
-        # lowering the fused path should at worst be in the same ballpark
-        # even on toy graphs where the bool einsum is competitive (observed
-        # 1.1-1.9x on the --tiny graph, 2.7x at full size) — a big
-        # words-path regression shows here long before it dents the
-        # (interpret-inflated) shipping-config bar above; 0.5 keeps the
-        # floor out of shared-runner noise
         ok_xla = fused["fused_vs_xla_speedup"] >= 0.5
         print(f"engine/packed_fused,{fused['t_fused']*1e6:.1f},"
               f"sweep_speedup={fused['fused_speedup']:.1f}x")
         print(f"# fused sweep throughput {fused['fused_speedup']:.1f}x over "
               f"packed ({'meets' if ok_fused else 'BELOW'} the 2x acceptance "
               f"bar), {fused['fused_vs_xla_speedup']:.1f}x over the packed "
-              f"engine's pure-XLA lowering; chi bit-identical to "
-              f"solve_worklist across all engines")
+              f"engine's pure-XLA lowering "
+              f"({'meets' if ok_xla else 'BELOW'} the 0.5x floor); chi "
+              f"bit-identical to solve_worklist across all engines")
     if args.fused_only:
         os.makedirs(RESULTS, exist_ok=True)
         with open(os.path.join(RESULTS, "engine.packed_fused.json"), "w") as f:
@@ -530,9 +532,6 @@ def main() -> None:
             "fused_sweeps_per_s": fused["sweeps_per_s_fused"],
             "packed_sweeps_per_s": fused["sweeps_per_s_packed"],
         })
-        # the CI perf-smoke gate: a regression on either ratio fails the job
-        if not (ok_fused and ok_xla):
-            raise SystemExit(1)
         return
 
     warm_iters = 5 if args.tiny else 20

@@ -1,41 +1,58 @@
-"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun/*.json."""
+"""Render the probed machine specs under ``results/machine/`` as Markdown.
+
+The seed version of this script globbed a results directory nothing
+produces anymore.  It now renders the output of the live probe
+(``benchmarks/roofline.py`` → ``MachineSpec`` JSON): one row per
+probed machine, the ceilings the calibrated cost model is derived from
+(DESIGN.md Sect. 13.2), suitable for pasting into EXPERIMENTS.md or a PR
+description.
+"""
 from __future__ import annotations
 
 import glob
 import json
+import os
 import sys
 
-PEAK = {"compute_s": "compute", "memory_s": "memory", "collective_s": "collective"}
+
+def load(spec_dir: str | None = None) -> list[dict]:
+    """All persisted machine specs, sorted by fingerprint."""
+    if spec_dir is None:
+        spec_dir = os.path.join(
+            os.path.dirname(__file__), "..", "results", "machine"
+        )
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(spec_dir, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return sorted(rows, key=lambda r: r.get("fingerprint", ""))
 
 
-def main(mesh_filter: str | None = None) -> None:
-    rows = [json.load(open(f)) for f in sorted(glob.glob("results/dryrun/*.json"))]
-    order = {"pod": 0, "multipod": 1}
-    rows.sort(key=lambda r: (r["arch"], r["cell"], order.get(r["mesh"], 2)))
-    print("| arch | cell | mesh | GiB/dev | compute_s | memory_s | coll_s "
-          "| dominant | frac@dom | MODEL/HLO |")
-    print("|---|---|---|---:|---:|---:|---:|---|---:|---:|")
+def main(spec_dir: str | None = None) -> None:
+    """Print the Markdown table of probed machines."""
+    rows = load(spec_dir)
+    if not rows:
+        print("(no machine specs probed yet — run "
+              "`PYTHONPATH=src python benchmarks/roofline.py`)")
+        return
+    print("| machine | backend | stream GB/s | dense Gelem/s "
+          "| packed Mw/s | xla Mw/s | launch µs | dispatch µs "
+          "| trace ms | coll GB/s | fast |")
+    print("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---|")
     for r in rows:
-        if mesh_filter and r.get("mesh") != mesh_filter:
-            continue
-        if r.get("skipped"):
-            print(f"| {r['arch']} | {r['cell']} | {r['mesh']} | — | — | — | — "
-                  f"| *skip: sub-quadratic attn required* | — | — |")
-            continue
-        t = r["roofline"]
-        tot = sum(t.values())
-        dom = t[r["dominant"]]
-        # roofline fraction: time the dominant term would take alone over the
-        # sum (overlap-free pessimistic bound); 1.0 = perfectly balanced on
-        # the bottleneck.
-        frac = dom / tot if tot else 0.0
-        ur = r.get("useful_flops_ratio")
-        urs = f"{ur:.2f}" if ur is not None else "—"
-        print(f"| {r['arch']} | {r['cell']} | {r['mesh']} "
-              f"| {r['bytes_per_device']/2**30:.2f} "
-              f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
-              f"| {t['collective_s']:.2e} | {PEAK[r['dominant']]} "
-              f"| {frac:.2f} | {urs} |")
+        coll = r.get("collective_bytes_per_s")
+        coll_s = f"{coll / 1e9:.2f}" if coll else "—"
+        print(
+            f"| `{r['fingerprint']}` | {r['backend']} "
+            f"| {r['stream_bytes_per_s'] / 1e9:.2f} "
+            f"| {r['dense_elems_per_s'] / 1e9:.2f} "
+            f"| {r['packed_words_per_s'] / 1e6:.1f} "
+            f"| {r['packed_words_per_s_xla'] / 1e6:.1f} "
+            f"| {r['kernel_launch_s'] * 1e6:.1f} "
+            f"| {r['dispatch_s'] * 1e6:.1f} "
+            f"| {r['trace_s'] * 1e3:.1f} "
+            f"| {coll_s} | {r.get('fast', False)} |"
+        )
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 """Benchmark runner: one section per paper table + engine micro-bench +
-the roofline summary.  Prints ``name,us_per_call,derived`` CSV lines per
+the machine probe.  Prints ``name,us_per_call,derived`` CSV lines per
 row (scaffold contract) and writes results/bench/*.json."""
 from __future__ import annotations
 
@@ -49,8 +49,14 @@ def main() -> None:
         _emit("kernels_micro", kernels_bench.bitmm_micro(), "t_pallas_interpret")
         _emit("kernels_segor", kernels_bench.segor_micro(), "t_packed_words")
     if "roofline" in sections:
-        _emit("roofline_pod", roofline.table("pod"), None)
-        _emit("roofline_multipod", roofline.table("multipod"), None)
+        # ERT-style machine probe (DESIGN.md 13.1): persists the MachineSpec
+        # under results/machine/ for the calibrated cost model + perf gate,
+        # and mirrors it into results/bench/ like every other section
+        spec, _ = roofline.probe(fast=True)
+        from repro.engine import machine as machine_mod
+
+        machine_mod.save_spec(spec)
+        _emit("machine_probe", [dict(bench="machine", **spec.to_json())], None)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

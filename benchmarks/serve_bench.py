@@ -184,19 +184,20 @@ async def _sweep(args) -> tuple:
 
 
 def _append_trajectory(entry: dict) -> None:
-    """Append one record to the committed ``BENCH_serve.json`` history."""
-    hist = []
-    if os.path.exists(BENCH_TOP):
-        try:
-            with open(BENCH_TOP) as f:
-                hist = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            hist = []
-    if not isinstance(hist, list):
-        hist = [hist]
-    hist.append(entry)
-    with open(BENCH_TOP, "w") as f:
-        json.dump(hist, f, indent=1, default=str)
+    """Append one record to the committed ``BENCH_serve.json`` history.
+
+    Shares ``tools.perfgate.history`` with ``engine_bench`` so the write is
+    atomic and append-only, and stamps the machine fingerprint so the perf
+    gate keeps per-machine series separate.
+    """
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from repro.engine.machine import machine_fingerprint
+    from tools.perfgate.history import append_record
+
+    entry.setdefault("machine", machine_fingerprint())
+    append_record(BENCH_TOP, entry)
 
 
 def main() -> None:

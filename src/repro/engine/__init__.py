@@ -27,12 +27,15 @@ from .batcher import BatchLayout, MicroBatcher, batch_layout, batched_soi, bucke
 from .cache import CacheStats, PlanCache
 from .cost import (
     CostEstimate,
+    CostModel,
+    HAND_TUNED,
     ResumeDecision,
     choose_engine,
     estimate_costs,
     resume_decision,
 )
 from .engine import Engine, EngineMetrics
+from .machine import MachineSpec, default_spec, machine_fingerprint
 from .plan import CompiledPlan, PlanMetrics
 from .template import (
     SLOT_PREFIX,
@@ -64,9 +67,12 @@ __all__ = [
     "CacheStats",
     "CompiledPlan",
     "CostEstimate",
+    "CostModel",
     "Engine",
     "EngineMetrics",
     "ExecResult",
+    "HAND_TUNED",
+    "MachineSpec",
     "MicroBatcher",
     "PlanCache",
     "PlanMetrics",
@@ -79,7 +85,9 @@ __all__ = [
     "bucket_for",
     "canonicalize",
     "choose_engine",
+    "default_spec",
     "estimate_costs",
+    "machine_fingerprint",
     "resume_decision",
     "template_key",
 ]

@@ -27,7 +27,7 @@ from repro.core import pruning, soi as soi_mod, sparql
 from repro.core.graph import Graph
 from repro.core.sparql import Query
 
-from . import cost as cost_mod
+from . import cost as cost_mod, machine as machine_mod
 from .batcher import DEFAULT_BUCKETS, MicroBatcher, bucket_for
 from .cache import BoundedDict, CacheStats, PlanCache
 from .plan import CompiledPlan
@@ -128,12 +128,19 @@ class Engine:
         mesh=None,
         n_blocks: int | None = None,
         incremental: bool = True,
+        spec: machine_mod.MachineSpec | None = None,
     ):
         """Build the facade over ``db`` (a Graph or a mutable GraphDB source).
 
         ``incremental`` enables warm-resume maintenance of superseded plans
         across shape-stable mutations (DESIGN.md Sect. 8); with it off,
         every mutation invalidates cold, as before.
+
+        ``spec`` pins the machine calibration every cost decision (engine
+        auto-selection, resume-vs-cold, serving admission) prices with;
+        ``None`` resolves the machine's persisted spec via
+        :func:`repro.engine.machine.default_spec` (hand-tuned fallback when
+        absent or disabled — DESIGN.md Sect. 13).
         """
         # ``db`` is either an immutable core Graph or a mutable source with
         # (graph, version, fingerprint, node_index) — i.e. repro.db.GraphDB.
@@ -143,6 +150,11 @@ class Engine:
         self.engine_pref = engine
         self.buckets = tuple(sorted(buckets))
         self.backend = backend
+        # resolved once so introspection (`eng.spec`) shows the calibration
+        # actually in force; None means the hand-tuned fallback model
+        self.spec = (
+            spec if spec is not None else machine_mod.default_spec(backend)
+        )
         # mesh: a jax.sharding.Mesh (see repro.distributed.ctx.node_mesh).
         # Plans shard chi's node axis across it and the cost model sees its
         # size, so engine="auto" can pick "partitioned" once the graph
@@ -348,6 +360,7 @@ class Engine:
                 last_sweeps=plan.last_sweeps,
                 backend=self.backend,
                 n_devices=self.n_devices,
+                spec=self.spec,
             )
             if decision.resume:
                 try:
@@ -374,6 +387,7 @@ class Engine:
             adj_cache=self._adj_cache,
             mesh=self.mesh,
             n_blocks=self.n_blocks,
+            spec=self.spec,
             # chi memoization only pays off when the graph can mutate: a
             # plan over a plain immutable Graph never stages warm starts
             incremental=self.incremental and self._source is not None,

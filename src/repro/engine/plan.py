@@ -92,8 +92,14 @@ class CompiledPlan:
         mesh: jax.sharding.Mesh | None = None,
         n_blocks: int | None = None,
         incremental: bool = True,
+        spec=None,
     ):
-        """Compile ``template`` against ``db`` at batch size ``batch``."""
+        """Compile ``template`` against ``db`` at batch size ``batch``.
+
+        ``spec`` is the :class:`repro.engine.machine.MachineSpec` the
+        ``engine="auto"`` selection prices with (``None``: the persisted
+        machine spec, then the hand-tuned fallback — DESIGN.md Sect. 13).
+        """
         t0 = time.perf_counter()
         backend = backend or jax.default_backend()
         self.template = template
@@ -156,7 +162,7 @@ class CompiledPlan:
         self.cost: cost_mod.CostEstimate | None = None
         if engine == "auto":
             self.cost = cost_mod.choose_engine(
-                db, self.csoi, backend=backend, n_devices=n_devices
+                db, self.csoi, backend=backend, n_devices=n_devices, spec=spec
             )
             engine = self.cost.engine
         self.engine = engine

@@ -283,7 +283,13 @@ class AsyncServer:
         if est is None:
             if len(self._cost_memo) > 4096:
                 self._cost_memo.clear()
-            est = cost_mod.admission_estimate(self._db.graph, query)
+            # priced with the engine's machine calibration (DESIGN.md 13):
+            # with a MachineSpec the estimate is seconds of sparse-engine
+            # solve time, so cost_cap becomes a latency budget
+            est = cost_mod.admission_estimate(
+                self._db.graph, query,
+                spec=getattr(self._db._engine, "spec", None),
+            )
             self._cost_memo[key] = est
         return est
 

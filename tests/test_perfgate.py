@@ -1,0 +1,185 @@
+"""The perf-regression gate on fabricated trajectories (ISSUE 9).
+
+The gate's contract, exercised without running any bench: an injected
+regression past a metric's tolerance fails with a per-metric diagnostic;
+run-to-run jitter inside the band passes; a record from an unseen machine
+fingerprint bootstraps its own series instead of failing against another
+machine's history; floors hold regardless of history; and the trajectory
+writer is atomic and append-only.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from tools.perfgate import (  # noqa: E402
+    BASELINE_WINDOW,
+    ENGINE_METRICS,
+    MetricPolicy,
+    check_history,
+    series_key,
+)
+from tools.perfgate.__main__ import check as gate_check  # noqa: E402
+from tools.perfgate.__main__ import main as gate_main  # noqa: E402
+from tools.perfgate.history import append_record, load_history  # noqa: E402
+
+
+def rec(**kw) -> dict:
+    base = {"engine": "auto", "tiny": True, "n_devices": 1,
+            "machine": "runner-a"}
+    base.update(kw)
+    return base
+
+
+def _by_status(findings, status):
+    return [f for f in findings if f.status == status]
+
+
+# --------------------------------------------------------------------- #
+# gate semantics
+# --------------------------------------------------------------------- #
+def test_injected_regression_fails_with_per_metric_diagnostic():
+    hist = [rec(fused_sweeps_per_s=1000.0),
+            rec(fused_sweeps_per_s=1050.0),
+            rec(fused_sweeps_per_s=500.0)]  # 2x drop vs best
+    findings = check_history(hist, ENGINE_METRICS)
+    bad = [f for f in findings if f.failed]
+    assert len(bad) == 1
+    f = bad[0]
+    assert f.status == "regression" and f.metric == "fused_sweeps_per_s"
+    assert "fused_sweeps_per_s" in f.message and "0.48x" in f.message
+    assert f.baseline == 1050.0 and f.current == 500.0
+
+
+def test_jitter_within_tolerance_passes():
+    hist = [rec(fused_sweeps_per_s=v, req_per_s_best=10 * v)
+            for v in (1000.0, 950.0, 1020.0, 940.0)]
+    findings = check_history(hist, ENGINE_METRICS)
+    assert not [f for f in findings if f.failed]
+    assert all(f.status in ("ok", "bootstrap") for f in findings)
+
+
+def test_unseen_machine_bootstraps_instead_of_cross_comparing():
+    hist = [rec(fused_sweeps_per_s=100_000.0),  # a fast machine's history
+            rec(fused_sweeps_per_s=99_000.0),
+            rec(fused_sweeps_per_s=900.0, machine="fresh-ci-runner")]
+    findings = check_history(hist, ENGINE_METRICS)
+    assert not [f for f in findings if f.failed]
+    boot = _by_status(findings, "bootstrap")
+    assert len(boot) == 1 and boot[0].current == 900.0
+    assert "bootstrapped" in boot[0].message
+
+
+def test_series_split_on_any_field_not_just_machine():
+    # same machine, different n_devices: independent trajectories
+    hist = [rec(fused_sweeps_per_s=1000.0),
+            rec(fused_sweeps_per_s=120.0, n_devices=8)]
+    assert series_key(hist[0]) != series_key(hist[1])
+    findings = check_history(hist, ENGINE_METRICS)
+    assert not [f for f in findings if f.failed]
+
+
+def test_absolute_floor_fails_even_with_consistent_history():
+    # warm_speedup floor is 5.0: a stable-but-sunk series is still a failure
+    hist = [rec(warm_speedup=3.0), rec(warm_speedup=3.1),
+            rec(warm_speedup=3.0)]
+    findings = check_history(hist, ENGINE_METRICS)
+    bad = [f for f in findings if f.failed]
+    assert len(bad) == 1 and bad[0].status == "floor_violation"
+    assert bad[0].metric == "warm_speedup" and "floor" in bad[0].message
+
+
+def test_baseline_is_best_of_recent_window():
+    # a slow leak: each run regresses 20% — the windowed best must still
+    # catch the cumulative drop once old peaks age out of the window
+    pol = (MetricPolicy("fused_sweeps_per_s", 0.35),)
+    values = [1000.0 * (0.8 ** i) for i in range(BASELINE_WINDOW + 2)]
+    findings = check_history([rec(fused_sweeps_per_s=v) for v in values], pol)
+    f = findings[-1]
+    assert f.status == "regression"
+    assert f.baseline == pytest.approx(values[-(BASELINE_WINDOW + 1)])
+
+
+def test_null_metrics_and_missing_fields_are_skipped():
+    hist = [rec(fused_sweeps_per_s=None, warm_speedup=None),
+            rec()]  # no gated metric at all
+    assert check_history(hist, ENGINE_METRICS) == []
+
+
+def test_global_tolerance_override():
+    hist = [rec(fused_sweeps_per_s=1000.0), rec(fused_sweeps_per_s=800.0)]
+    assert not [f for f in check_history(hist, ENGINE_METRICS) if f.failed]
+    tight = check_history(hist, ENGINE_METRICS, tolerance=0.1)
+    assert [f for f in tight if f.failed]
+
+
+# --------------------------------------------------------------------- #
+# CLI exit statuses
+# --------------------------------------------------------------------- #
+def _write(path, records):
+    with open(path, "w") as f:
+        json.dump(records, f)
+    return str(path)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    good = _write(tmp_path / "good.json",
+                  [rec(fused_sweeps_per_s=1000.0),
+                   rec(fused_sweeps_per_s=980.0)])
+    bad = _write(tmp_path / "bad.json",
+                 [rec(fused_sweeps_per_s=1000.0),
+                  rec(fused_sweeps_per_s=400.0)])
+    missing = str(tmp_path / "missing.json")
+    assert gate_check(good, missing) == 0
+    assert gate_check(bad, missing) == 1
+    out = capsys.readouterr().out
+    assert "perfgate/FAIL" in out and "fused_sweeps_per_s" in out
+    # argparse front end, default --check mode
+    assert gate_main(["--engine-history", good,
+                      "--serve-history", missing]) == 0
+    assert gate_main(["--check", "--engine-history", bad,
+                      "--serve-history", missing]) == 1
+    # a gate with nothing to gate is a misconfiguration, not a pass
+    assert gate_check(missing, missing) == 1
+
+
+def test_cli_tolerance_override_and_json(tmp_path, capsys):
+    hist = _write(tmp_path / "h.json",
+                  [rec(fused_sweeps_per_s=1000.0),
+                   rec(fused_sweeps_per_s=800.0)])
+    missing = str(tmp_path / "missing.json")
+    assert gate_main(["--engine-history", hist, "--serve-history", missing,
+                      "--tolerance", "0.1", "--json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert any(f["failed"] for f in payload)
+
+
+# --------------------------------------------------------------------- #
+# trajectory writer: atomic + append-only
+# --------------------------------------------------------------------- #
+def test_append_record_preserves_existing_history(tmp_path):
+    path = tmp_path / "BENCH.json"
+    _write(path, [rec(fused_sweeps_per_s=1.0)])
+    out = append_record(str(path), rec(fused_sweeps_per_s=2.0))
+    assert [r["fused_sweeps_per_s"] for r in out] == [1.0, 2.0]
+    assert load_history(str(path)) == out
+    # no temp-file litter from the atomic replace
+    assert os.listdir(tmp_path) == ["BENCH.json"]
+
+
+def test_append_record_creates_fresh_history(tmp_path):
+    path = str(tmp_path / "new" / "BENCH.json")
+    append_record(path, rec(fused_sweeps_per_s=3.0))
+    assert len(load_history(path)) == 1
+
+
+def test_load_history_tolerates_corrupt_file(tmp_path):
+    path = tmp_path / "BENCH.json"
+    path.write_text("{ not json")
+    assert load_history(str(path)) == []
+    # a scalar (non-list) payload wraps instead of crashing
+    _write(path, {"engine": "auto"})
+    assert load_history(str(path)) == [{"engine": "auto"}]

@@ -485,3 +485,49 @@ def test_background_flusher_fires_without_further_calls(db):
             MEMBERS_OF.format(uni="Univ1")))
     finally:
         session.close()
+
+
+# --------------------------------------------------------------------- #
+# satellite (ISSUE 9): spec-calibrated admission pricing is commensurate
+# with measured reality
+# --------------------------------------------------------------------- #
+def test_admission_estimate_calibrated_within_measured_envelope(db):
+    """With a MachineSpec the admission envelope is priced in *seconds* —
+    so it must land within a bounded ratio of a measured warm solve, unlike
+    the hand-tuned arbitrary units (off by ~6 orders of magnitude).  The
+    spec uses ceilings of a modest CPU container; the wide 1e-3..1e3 band
+    absorbs the machine-to-machine spread while still ruling out any
+    unit-confusion regression.
+    """
+    from repro.core import sparql
+    from repro.engine import cost as cost_mod
+    from repro.engine.machine import MachineSpec
+
+    spec = MachineSpec(
+        backend="cpu", device_kind="cpu", fingerprint="test-cpu-container",
+        n_devices=1, stream_bytes_per_s=2e9, dense_elems_per_s=2.6e10,
+        packed_words_per_s=1e8, packed_words_per_s_xla=3.4e8,
+        fused_words_per_s=3.4e8, kernel_launch_s=4e-4, dispatch_s=3.2e-5,
+        trace_s=0.22,
+    )
+    text = MEMBERS_OF.format(uni="Univ0")
+    db.query(text)  # warm: plan cached, jit traced
+    measured = min(
+        _timed(lambda: db.query(text)) for _ in range(5)
+    )
+    est = cost_mod.admission_estimate(db.graph, sparql.parse(text), spec=spec)
+    assert est > 0.0
+    ratio = est / measured
+    assert 1e-3 <= ratio <= 1e3, (
+        f"calibrated admission {est:.3g}s vs measured {measured:.3g}s "
+        f"(ratio {ratio:.3g})"
+    )
+    # the hand-tuned envelope is NOT commensurate: same formula, arb units
+    arb = cost_mod.admission_estimate(db.graph, sparql.parse(text))
+    assert arb / measured > 1e3
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

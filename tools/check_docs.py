@@ -24,7 +24,9 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = ["README.md", "DESIGN.md"]
-DOCSTRING_DIRS = ["src/repro/db", "src/repro/engine", "src/repro/serve"]
+DOCSTRING_DIRS = [
+    "src/repro/db", "src/repro/engine", "src/repro/serve", "tools/perfgate",
+]
 PATH_DIRS = ("src/", "tests/", "benchmarks/", "examples/", "results/",
              "tools/", ".github/")
 

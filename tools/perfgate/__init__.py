@@ -1,0 +1,188 @@
+"""Perf-regression gate over the committed bench trajectories (DESIGN.md 13.3).
+
+``python -m tools.perfgate --check`` reads the top-level
+``BENCH_engine.json`` / ``BENCH_serve.json`` histories, splits the records
+into *series* (one independent trajectory per distinct combination of
+:data:`SERIES_FIELDS` — engine, ``--tiny`` flag, device count, machine
+fingerprint, ...), and gates each metric's latest value against its own
+past.  Exit status 1 on any regression or absolute-floor violation, with a
+per-metric diagnostic naming the offending series, value, and baseline.
+
+Policy (the reframe-style noise handling):
+
+* **baseline = best of the last K same-series values** (K =
+  :data:`BASELINE_WINDOW`).  The median is the wrong statistic here: the
+  committed series span machines whose absolute throughput differs by
+  several x, so a genuine 2x regression can still sit above the median of
+  a mixed past.  Best-of-recent compares a run against the best this exact
+  series has demonstrated recently, which is what a throughput regression
+  is *relative to*.
+* **per-metric tolerance** — each :class:`MetricPolicy` carries the noise
+  band observed for that metric on shared CI runners (e.g. sweep
+  throughput is steadier than warm-speedup ratios, whose numerator is a
+  one-shot cold trace).  ``--tolerance`` overrides globally for local
+  what-if runs.
+* **absolute floors** — ratios that are acceptance criteria of earlier
+  PRs (warm >= 5x, fused-vs-packed >= 2x, ...) also gate on a floor, so a
+  slow drift that never trips the relative check still cannot sink below
+  the bar.  This replaces the ad-hoc ``SystemExit`` asserts that used to
+  live inside ``benchmarks/engine_bench.py``.
+* **bootstrap** — a series with a single record (first run on an unseen
+  machine fingerprint) has no baseline: it passes and is reported as
+  ``bootstrap``, becoming the baseline for the machine's next run.
+
+The machine fingerprint in :data:`SERIES_FIELDS` is what keeps the gate
+honest across heterogeneous runners: a laptop's history never gates a CI
+runner and vice versa (see :func:`repro.engine.machine.machine_fingerprint`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: Record fields whose values split the history into independent series.
+#: Absent fields read as ``None`` (old records without a machine stamp form
+#: their own legacy series rather than aliasing a fingerprinted one).
+SERIES_FIELDS = (
+    "bench", "engine", "tiny", "n_devices", "loop", "smoke", "replicas",
+    "machine",
+)
+
+#: Baseline = best of this many most-recent earlier same-series values.
+BASELINE_WINDOW = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricPolicy:
+    """Gate policy for one metric of a trajectory record.
+
+    ``tolerance`` is the allowed fractional drop vs the baseline (0.40
+    means the latest value must retain >= 60% of the best recent value).
+    ``floor`` is an optional absolute lower bound — an acceptance bar that
+    holds regardless of history.  All gated metrics are
+    higher-is-better rates/ratios; ``higher_is_better=False`` flips the
+    comparison for latency-style metrics if one is ever added.
+    """
+
+    name: str
+    tolerance: float
+    floor: float | None = None
+    higher_is_better: bool = True
+
+
+#: Gated metrics of ``BENCH_engine.json`` records (absent/None fields skip).
+ENGINE_METRICS = (
+    MetricPolicy("req_per_s_best", 0.40),
+    MetricPolicy("warm_speedup", 0.60, floor=5.0),
+    MetricPolicy("fused_vs_packed_sweep_speedup", 0.50, floor=2.0),
+    MetricPolicy("fused_vs_xla_speedup", 0.60, floor=0.5),
+    MetricPolicy("fused_sweeps_per_s", 0.35),
+    MetricPolicy("packed_sweeps_per_s", 0.50),
+    MetricPolicy("mutation_best_speedup", 0.60, floor=5.0),
+    MetricPolicy("ingest_triples_per_s", 0.40),
+)
+
+#: Gated metrics of ``BENCH_serve.json`` records.
+SERVE_METRICS = (
+    MetricPolicy("capacity_burst_req_s", 0.40),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One gate verdict: a metric of a series, with its diagnostic line."""
+
+    metric: str
+    series: str
+    status: str  # "ok" | "regression" | "floor_violation" | "bootstrap"
+    current: float
+    baseline: float | None
+    ratio: float | None
+    message: str
+
+    @property
+    def failed(self) -> bool:
+        """True when this finding should fail the gate."""
+        return self.status in ("regression", "floor_violation")
+
+
+def series_key(record: dict) -> tuple:
+    """Hashable identity of the trajectory series a record belongs to."""
+    return tuple((f, record.get(f)) for f in SERIES_FIELDS)
+
+
+def _series_label(key: tuple) -> str:
+    parts = [f"{k}={v}" for k, v in key if v is not None]
+    return " ".join(parts) or "(default)"
+
+
+def check_history(
+    records: list[dict],
+    policies: tuple[MetricPolicy, ...],
+    *,
+    window: int = BASELINE_WINDOW,
+    tolerance: float | None = None,
+) -> list[Finding]:
+    """Gate every metric of every series in ``records``.
+
+    Records are grouped by :func:`series_key` in file order (the committed
+    trajectories are chronological).  Per metric and series: the latest
+    non-null value gates against the floor first, then against the best of
+    up to ``window`` earlier values.  ``tolerance`` overrides every
+    policy's own band when given.  Returns one :class:`Finding` per
+    (series, metric) that has at least one value.
+    """
+    groups: dict[tuple, list[dict]] = {}
+    for rec in records:
+        groups.setdefault(series_key(rec), []).append(rec)
+    findings: list[Finding] = []
+    for key, recs in sorted(groups.items(), key=lambda kv: str(kv[0])):
+        label = _series_label(key)
+        for pol in policies:
+            tol = tolerance if tolerance is not None else pol.tolerance
+            values = [
+                float(r[pol.name]) for r in recs
+                if isinstance(r.get(pol.name), (int, float))
+            ]
+            if not values:
+                continue
+            current = values[-1]
+            lo_ok = pol.floor is None or (
+                current >= pol.floor if pol.higher_is_better
+                else current <= pol.floor
+            )
+            if not lo_ok:
+                findings.append(Finding(
+                    pol.name, label, "floor_violation", current, None, None,
+                    f"{pol.name}={current:.4g} violates the absolute "
+                    f"{'floor' if pol.higher_is_better else 'ceiling'} "
+                    f"{pol.floor:g} [{label}]",
+                ))
+                continue
+            earlier = values[:-1][-window:]
+            if not earlier:
+                findings.append(Finding(
+                    pol.name, label, "bootstrap", current, None, None,
+                    f"{pol.name}={current:.4g}: first record for this "
+                    f"series — baseline bootstrapped [{label}]",
+                ))
+                continue
+            if pol.higher_is_better:
+                baseline = max(earlier)
+                ratio = current / baseline if baseline > 0 else 1.0
+            else:
+                baseline = min(earlier)
+                ratio = baseline / current if current > 0 else 1.0
+            if ratio < 1.0 - tol:
+                findings.append(Finding(
+                    pol.name, label, "regression", current, baseline, ratio,
+                    f"{pol.name}={current:.4g} vs best-of-last-"
+                    f"{len(earlier)} {baseline:.4g}: {ratio:.2f}x retained "
+                    f"< {1.0 - tol:.2f} allowed [{label}]",
+                ))
+            else:
+                findings.append(Finding(
+                    pol.name, label, "ok", current, baseline, ratio,
+                    f"{pol.name}={current:.4g} vs {baseline:.4g} "
+                    f"({ratio:.2f}x) [{label}]",
+                ))
+    return findings

@@ -1,0 +1,151 @@
+"""CLI of the perf-regression gate: ``python -m tools.perfgate``.
+
+Modes (composable; run in the order probe -> replay -> check):
+
+* ``--probe``  — run the ERT-style machine probe (``benchmarks.roofline``)
+  so the replayed benches and the calibrated cost model see a persisted
+  :class:`~repro.engine.machine.MachineSpec` for this machine.
+* ``--replay`` — re-run the CI-sized bench sections in subprocesses
+  (``engine_bench --tiny --fused-only`` and ``serve_bench --smoke``),
+  each of which appends a machine-stamped record to its committed
+  ``BENCH_*.json`` trajectory.
+* ``--check``  — the default: gate the latest value of every metric/series
+  against its own history (see :mod:`tools.perfgate`); exit 1 on any
+  regression or floor violation, with per-metric diagnostics.
+
+The gate needs no third-party imports — ``--check`` runs on a bare Python
+with just the committed JSON files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from . import ENGINE_METRICS, SERVE_METRICS, Finding, check_history
+from .history import load_history
+
+REPO = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "..")
+)
+ENGINE_HISTORY = os.path.join(REPO, "BENCH_engine.json")
+SERVE_HISTORY = os.path.join(REPO, "BENCH_serve.json")
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    extra = [os.path.join(REPO, "src"), REPO]
+    if env.get("PYTHONPATH"):
+        extra.append(env["PYTHONPATH"])
+    env["PYTHONPATH"] = os.pathsep.join(extra)
+    return env
+
+
+def _run(argv: list[str]) -> int:
+    print(f"# perfgate$ {sys.executable} {' '.join(argv)}", flush=True)
+    return subprocess.run(
+        [sys.executable, *argv], cwd=REPO, env=_env()
+    ).returncode
+
+
+def probe(fast: bool = True) -> int:
+    """Run the machine probe; persists the spec under ``results/machine/``."""
+    return _run(["-m", "benchmarks.roofline"] + (["--fast"] if fast else []))
+
+
+def replay() -> int:
+    """Re-run the CI bench sections that append to the trajectories."""
+    rc = _run(["-m", "benchmarks.engine_bench", "--tiny", "--fused-only"])
+    if rc:
+        return rc
+    return _run(["-m", "benchmarks.serve_bench", "--smoke"])
+
+
+def check(
+    engine_history: str,
+    serve_history: str,
+    tolerance: float | None = None,
+    as_json: bool = False,
+) -> int:
+    """Gate both trajectories; print diagnostics; return the exit status."""
+    findings: list[Finding] = []
+    n_records = 0
+    for path, policies in (
+        (engine_history, ENGINE_METRICS),
+        (serve_history, SERVE_METRICS),
+    ):
+        records = load_history(path)
+        n_records += len(records)
+        findings += check_history(records, policies, tolerance=tolerance)
+    if as_json:
+        print(json.dumps(
+            [vars(f) | {"failed": f.failed} for f in findings], indent=1
+        ))
+    else:
+        for f in findings:
+            tag = "FAIL" if f.failed else f.status
+            print(f"perfgate/{tag}: {f.message}")
+    failed = [f for f in findings if f.failed]
+    if n_records == 0:
+        print("perfgate/FAIL: no trajectory records found "
+              f"({engine_history}, {serve_history}) — nothing to gate",
+              file=sys.stderr)
+        return 1
+    if failed:
+        print(f"# perfgate: {len(failed)} failing metric(s) of "
+              f"{len(findings)} checked", file=sys.stderr)
+        return 1
+    print(f"# perfgate: {len(findings)} metric series ok "
+          f"({sum(1 for f in findings if f.status == 'bootstrap')} "
+          f"bootstrapped)")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Parse arguments and run the requested modes."""
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.perfgate",
+        description=__doc__.splitlines()[0],
+    )
+    ap.add_argument("--check", action="store_true",
+                    help="gate the trajectories (default mode)")
+    ap.add_argument("--replay", action="store_true",
+                    help="re-run the CI bench sections first (appends "
+                         "machine-stamped records)")
+    ap.add_argument("--probe", action="store_true",
+                    help="run the machine probe first (persists the "
+                         "MachineSpec the benches calibrate against)")
+    ap.add_argument("--fast", action="store_true", default=True,
+                    help="probe with the reduced CI sweep (default)")
+    ap.add_argument("--full-probe", dest="fast", action="store_false",
+                    help="probe with the full sweep")
+    ap.add_argument("--engine-history", default=ENGINE_HISTORY,
+                    help="path of the engine trajectory JSON")
+    ap.add_argument("--serve-history", default=SERVE_HISTORY,
+                    help="path of the serve trajectory JSON")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON instead of text")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override every metric's tolerance band")
+    args = ap.parse_args(argv)
+
+    if args.probe:
+        rc = probe(fast=args.fast)
+        if rc:
+            return rc
+    if args.replay:
+        rc = replay()
+        if rc:
+            return rc
+    # the gate always runs last: probe/replay without a check would
+    # silently accept whatever they produced
+    return check(
+        args.engine_history, args.serve_history,
+        tolerance=args.tolerance, as_json=args.json,
+    )
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,57 @@
+"""Atomic, append-only access to the committed ``BENCH_*.json`` trajectories.
+
+The top-level ``BENCH_engine.json`` / ``BENCH_serve.json`` files are the
+cross-PR perf history the gate replays against: every bench run appends one
+record, and a PR that deliberately refreshes the trajectory commits the
+appended records.  Two invariants matter and both live here so the bench
+scripts and the gate share one implementation:
+
+* **append-only** — a run may add records, never rewrite or drop earlier
+  ones (the gate's baseline is the committed past; silently truncating it
+  would let any regression pass).
+* **atomic** — the rewrite goes through a temp file + ``os.replace`` so an
+  interrupted bench run leaves the previous history intact instead of a
+  half-written JSON that the next load would discard.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def load_history(path: str) -> list[dict]:
+    """Records in file order; ``[]`` for a missing or unparseable file."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            hist = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return []
+    if not isinstance(hist, list):
+        hist = [hist]
+    return [r for r in hist if isinstance(r, dict)]
+
+
+def append_record(path: str, entry: dict) -> list[dict]:
+    """Append ``entry`` to the trajectory at ``path``; return the new history.
+
+    Loads the existing records, appends, and replaces the file atomically
+    (``mkstemp`` in the same directory + ``os.replace``), so a crash
+    mid-write can never lose the committed history.
+    """
+    hist = load_history(path)
+    hist.append(entry)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(hist, f, indent=1, default=str)
+            f.write("\n")
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return hist
