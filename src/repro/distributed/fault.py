@@ -63,6 +63,11 @@ class StragglerMonitor:
                 out.append(host)
         return sorted(out)
 
+    def forget(self, host: str) -> None:
+        """Drop a host's history (a replaced/rebuilt host starts fresh)."""
+        self._lat.pop(host, None)
+        self._last.pop(host, None)
+
     def dead(self, now: float, timeout: float) -> list[str]:
         return sorted(
             h for h, hb in self._last.items() if now - hb.t > timeout

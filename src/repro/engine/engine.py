@@ -211,6 +211,9 @@ class Engine:
         self._adj_rebuilds_saved = 0  # guarded-by: _stats_lock
         self._engine_counts: dict[str, int] = {}  # guarded-by: _stats_lock
         self._stage_seconds: dict[str, float] = {}  # guarded-by: _stats_lock
+        # fault-injection hook (repro.faults.BoundFaults); None disarms the
+        # site at the cost of one attribute read per prepared batch
+        self.faults = None
 
     # ------------------------------------------------------------------ #
     # versioned invalidation (repro.db.GraphDB mutations)
@@ -452,6 +455,10 @@ class Engine:
         same graph version, even when the source database mutates while
         the batch is in flight.
         """
+        if self.faults is not None:
+            # deterministic injection site (DESIGN.md 14.1): a poisoned
+            # request raises here, on every replica it is retried on
+            self.faults.on_execute_prepared(list(prepared))
         self.refresh()
         results: list[ExecResult | None] = [None] * len(prepared)
         batcher = MicroBatcher(self.buckets)

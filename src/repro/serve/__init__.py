@@ -12,7 +12,15 @@ streaming result delivery::
         futs = [server.submit(q, tenant="alice") for q in queries]
         results = await asyncio.gather(*futs)
         assert all(r.outcome in ("ok", "overloaded", "deadline", "cost",
-                                 "error") for r in results)
+                                 "error", "timeout") for r in results)
+
+Since ISSUE 10 the loop also carries the failure plane (DESIGN.md Sect.
+14): per-replica health (healthy → suspect → quarantined → rebuilding)
+with routing that skips quarantined members, deadline-budgeted retry and
+optional hedging, a per-batch solve watchdog behind the explicit
+``timeout`` outcome, and deterministic fault injection via
+:mod:`repro.faults` — the chaos soak over all of it lives in
+``benchmarks/chaos_bench.py`` (-> ``BENCH_chaos.json``).
 
 The open-loop saturation benchmark over this loop lives in
 ``benchmarks/serve_bench.py`` (p50/p99 vs offered load -> the top-level
@@ -22,17 +30,30 @@ capacity.
 """
 from .fairness import DeficitRoundRobin
 from .metrics import LatencyHistogram, MetricsSnapshot, ServeMetrics
-from .router import Replica, ReplicaRouter
+from .router import (
+    HEALTHY,
+    QUARANTINED,
+    REBUILDING,
+    SUSPECT,
+    NoHealthyReplica,
+    Replica,
+    ReplicaRouter,
+)
 from .server import OUTCOMES, AsyncServer, ServeResult, stream_pages
 
 __all__ = [
     "AsyncServer",
     "DeficitRoundRobin",
+    "HEALTHY",
     "LatencyHistogram",
     "MetricsSnapshot",
+    "NoHealthyReplica",
     "OUTCOMES",
+    "QUARANTINED",
+    "REBUILDING",
     "Replica",
     "ReplicaRouter",
+    "SUSPECT",
     "ServeMetrics",
     "ServeResult",
     "stream_pages",

@@ -92,6 +92,12 @@ class MetricsSnapshot:
     queue_wait: dict[str, float]  # LatencyHistogram.summary() of queue time
     latency: dict[str, float]  # summary() of end-to-end completed latency
     service: dict[str, float]  # summary() of per-batch service time
+    # failure-plane counters (ISSUE 10); defaulted so older constructors
+    # and serialized snapshots stay valid
+    timeouts: int = 0  # requests resolved with the explicit timeout outcome
+    retries: int = 0  # batch attempts re-dispatched to another replica
+    hedges: int = 0  # speculative duplicate dispatches past the tracked p99
+    watchdog_overruns: int = 0  # attempts abandoned by the solve watchdog
 
     @property
     def shed_total(self) -> int:
@@ -103,6 +109,11 @@ class MetricsSnapshot:
         """Fraction of submitted requests shed (0 when nothing submitted)."""
         return self.shed_total / self.submitted if self.submitted else 0.0
 
+    @property
+    def resolved(self) -> int:
+        """Every request that reached a terminal outcome, any outcome."""
+        return self.completed + self.shed_total + self.errors + self.timeouts
+
 
 class ServeMetrics:
     """Thread-safe serving counters with a single-lock snapshot.
@@ -111,7 +122,9 @@ class ServeMetrics:
     ``submitted == admitted + shed_total + errors_at_admission`` is folded
     into ``submitted >= admitted + shed_total`` and
     ``admitted >= completed + shed["deadline"]`` while requests are in
-    flight, with equality once the server has drained.
+    flight; once the server has drained,
+    ``submitted == completed + shed_total + errors + timeouts``
+    (the :attr:`MetricsSnapshot.resolved` identity).
     """
 
     def __init__(self):
@@ -127,6 +140,10 @@ class ServeMetrics:
         self._queue_wait = LatencyHistogram()  # guarded-by: _lock
         self._latency = LatencyHistogram()  # guarded-by: _lock
         self._service = LatencyHistogram()  # guarded-by: _lock
+        self._timeouts = 0  # guarded-by: _lock
+        self._retries = 0  # guarded-by: _lock
+        self._hedges = 0  # guarded-by: _lock
+        self._watchdog_overruns = 0  # guarded-by: _lock
 
     # ------------------------------------------------------------------ #
     # requires-lock: _lock
@@ -170,6 +187,38 @@ class ServeMetrics:
             self._errors += 1
             self._tenant(tenant)["errors"] += 1
 
+    def on_timeout(self, tenant: str, queue_s: float = 0.0) -> None:
+        """One admitted request exhausted its deadline across attempts."""
+        with self._lock:
+            self._timeouts += 1
+            self._tenant(tenant)["timeouts"] = (
+                self._tenant(tenant).get("timeouts", 0) + 1
+            )
+            if queue_s > 0.0:
+                self._queue_wait.add(queue_s)
+
+    def on_retry(self) -> None:
+        """One batch attempt was re-dispatched to a different replica."""
+        with self._lock:
+            self._retries += 1
+
+    def on_hedge(self) -> None:
+        """One speculative hedge dispatch was issued."""
+        with self._lock:
+            self._hedges += 1
+
+    def on_watchdog(self) -> None:
+        """One routed attempt was abandoned by the solve watchdog."""
+        with self._lock:
+            self._watchdog_overruns += 1
+
+    def service_quantile(self, q: float) -> float | None:
+        """Per-batch service-time quantile in seconds (None with no samples)."""
+        with self._lock:
+            if self._service.n == 0:
+                return None
+            return self._service.quantile(q)
+
     def on_batch(self, service_s: float, depth: int) -> None:
         """One microbatch finished executing; ``depth`` is the queue now."""
         with self._lock:
@@ -198,4 +247,8 @@ class ServeMetrics:
                 queue_wait=self._queue_wait.summary(),
                 latency=self._latency.summary(),
                 service=self._service.summary(),
+                timeouts=self._timeouts,
+                retries=self._retries,
+                hedges=self._hedges,
+                watchdog_overruns=self._watchdog_overruns,
             )

@@ -103,6 +103,19 @@ def test_baseline_is_best_of_recent_window():
     assert f.baseline == pytest.approx(values[-(BASELINE_WINDOW + 1)])
 
 
+def test_chaos_floors_gate_goodput_and_rebuild():
+    # ISSUE 10: the chaos-soak acceptance criteria are absolute floors —
+    # they fail even on a bootstrap record with no history behind it
+    from tools.perfgate import CHAOS_METRICS
+
+    ok = [rec(goodput_retained=0.9, rebuilt=1.0, bit_identical=1.0)]
+    assert not [f for f in check_history(ok, CHAOS_METRICS) if f.failed]
+    bad = [rec(goodput_retained=0.5, rebuilt=0.0, bit_identical=1.0)]
+    failed = [f.metric for f in check_history(bad, CHAOS_METRICS) if f.failed]
+    assert "goodput_retained" in failed and "rebuilt" in failed
+    assert "bit_identical" not in failed
+
+
 def test_null_metrics_and_missing_fields_are_skipped():
     hist = [rec(fused_sweeps_per_s=None, warm_speedup=None),
             rec()]  # no gated metric at all
@@ -133,17 +146,19 @@ def test_cli_exit_codes(tmp_path, capsys):
                  [rec(fused_sweeps_per_s=1000.0),
                   rec(fused_sweeps_per_s=400.0)])
     missing = str(tmp_path / "missing.json")
-    assert gate_check(good, missing) == 0
-    assert gate_check(bad, missing) == 1
+    assert gate_check(good, missing, missing) == 0
+    assert gate_check(bad, missing, missing) == 1
     out = capsys.readouterr().out
     assert "perfgate/FAIL" in out and "fused_sweeps_per_s" in out
     # argparse front end, default --check mode
     assert gate_main(["--engine-history", good,
-                      "--serve-history", missing]) == 0
+                      "--serve-history", missing,
+                      "--chaos-history", missing]) == 0
     assert gate_main(["--check", "--engine-history", bad,
-                      "--serve-history", missing]) == 1
+                      "--serve-history", missing,
+                      "--chaos-history", missing]) == 1
     # a gate with nothing to gate is a misconfiguration, not a pass
-    assert gate_check(missing, missing) == 1
+    assert gate_check(missing, missing, missing) == 1
 
 
 def test_cli_tolerance_override_and_json(tmp_path, capsys):
@@ -152,6 +167,7 @@ def test_cli_tolerance_override_and_json(tmp_path, capsys):
                    rec(fused_sweeps_per_s=800.0)])
     missing = str(tmp_path / "missing.json")
     assert gate_main(["--engine-history", hist, "--serve-history", missing,
+                      "--chaos-history", missing,
                       "--tolerance", "0.1", "--json"]) == 1
     payload = json.loads(capsys.readouterr().out)
     assert any(f["failed"] for f in payload)

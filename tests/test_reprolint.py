@@ -2,7 +2,7 @@
 
 Three families, mirroring the contract in DESIGN.md Sect. 11:
 
-* **fire-on-bad** — each rule RL1-RL4 produces its documented findings on
+* **fire-on-bad** — each rule RL1-RL5 produces its documented findings on
   the deliberately-dirty fixture in ``tools/reprolint/selftest/``;
 * **silent-on-good** — the corrected twin of each fixture produces none;
 * **silent-on-frozen-clean** — ``clean_snapshot.py`` (a frozen copy of the
@@ -82,10 +82,22 @@ def test_rl4_fires_on_bad_fixture():
     assert len(findings) == 3
 
 
+def test_rl5_fires_on_bad_fixture():
+    findings = lint(SELFTEST / "rl5_bad.py")
+    assert rule_ids(findings) == {"RL5"}
+    messages = " | ".join(f.message for f in findings)
+    assert "bare `except:`" in messages
+    assert "silently swallows" in messages
+    assert "create_task" in messages
+    # 1 bare + 3 broad swallows + 2 dropped task handles
+    assert len(findings) == 6
+    assert sum("create_task" in f.message for f in findings) == 2
+
+
 # --------------------------------------------------------------------- #
 # silent-on-good
 # --------------------------------------------------------------------- #
-@pytest.mark.parametrize("rule", ["rl1", "rl2", "rl3", "rl4"])
+@pytest.mark.parametrize("rule", ["rl1", "rl2", "rl3", "rl4", "rl5"])
 def test_good_fixture_is_silent(rule):
     assert lint(SELFTEST / f"{rule}_good.py") == []
 

@@ -10,8 +10,8 @@ Two passes, both over the repository root this file sits under:
 2. **Docstring coverage** — a local mirror of the ruff pydocstyle subset CI
    runs (``D100,D101,D102,D103,D104,D419``: missing/empty docstrings on
    public modules, classes, methods and functions) over ``src/repro/db``,
-   ``src/repro/engine``, and ``src/repro/serve``, so the gate can run in
-   environments without ruff installed.
+   ``src/repro/engine``, ``src/repro/serve``, and ``src/repro/faults``,
+   so the gate can run in environments without ruff installed.
 
     python tools/check_docs.py
 """
@@ -25,7 +25,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = ["README.md", "DESIGN.md"]
 DOCSTRING_DIRS = [
-    "src/repro/db", "src/repro/engine", "src/repro/serve", "tools/perfgate",
+    "src/repro/db", "src/repro/engine", "src/repro/serve",
+    "src/repro/faults", "tools/perfgate",
 ]
 PATH_DIRS = ("src/", "tests/", "benchmarks/", "examples/", "results/",
              "tools/", ".github/")

@@ -86,6 +86,18 @@ SERVE_METRICS = (
     MetricPolicy("capacity_burst_req_s", 0.40),
 )
 
+#: Gated metrics of ``BENCH_chaos.json`` records (ISSUE 10).  The floors
+#: ARE the acceptance criteria: chaos goodput must retain >= 70% of the
+#: fault-free baseline, and the crashed replica must come back rebuilt and
+#: bit-identical on every soak (those two are 0/1 indicators, so the floor
+#: alone gates them).
+CHAOS_METRICS = (
+    MetricPolicy("goodput_retained", 0.25, floor=0.70),
+    MetricPolicy("goodput_chaos_req_s", 0.40),
+    MetricPolicy("rebuilt", 0.0, floor=1.0),
+    MetricPolicy("bit_identical", 0.0, floor=1.0),
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class Finding:

@@ -6,9 +6,9 @@ Modes (composable; run in the order probe -> replay -> check):
   so the replayed benches and the calibrated cost model see a persisted
   :class:`~repro.engine.machine.MachineSpec` for this machine.
 * ``--replay`` — re-run the CI-sized bench sections in subprocesses
-  (``engine_bench --tiny --fused-only`` and ``serve_bench --smoke``),
-  each of which appends a machine-stamped record to its committed
-  ``BENCH_*.json`` trajectory.
+  (``engine_bench --tiny --fused-only``, ``serve_bench --smoke``, and
+  ``chaos_bench --smoke``), each of which appends a machine-stamped
+  record to its committed ``BENCH_*.json`` trajectory.
 * ``--check``  — the default: gate the latest value of every metric/series
   against its own history (see :mod:`tools.perfgate`); exit 1 on any
   regression or floor violation, with per-metric diagnostics.
@@ -24,7 +24,7 @@ import os
 import subprocess
 import sys
 
-from . import ENGINE_METRICS, SERVE_METRICS, Finding, check_history
+from . import CHAOS_METRICS, ENGINE_METRICS, SERVE_METRICS, Finding, check_history
 from .history import load_history
 
 REPO = os.path.normpath(
@@ -32,6 +32,7 @@ REPO = os.path.normpath(
 )
 ENGINE_HISTORY = os.path.join(REPO, "BENCH_engine.json")
 SERVE_HISTORY = os.path.join(REPO, "BENCH_serve.json")
+CHAOS_HISTORY = os.path.join(REPO, "BENCH_chaos.json")
 
 
 def _env() -> dict:
@@ -60,21 +61,26 @@ def replay() -> int:
     rc = _run(["-m", "benchmarks.engine_bench", "--tiny", "--fused-only"])
     if rc:
         return rc
-    return _run(["-m", "benchmarks.serve_bench", "--smoke"])
+    rc = _run(["-m", "benchmarks.serve_bench", "--smoke"])
+    if rc:
+        return rc
+    return _run(["-m", "benchmarks.chaos_bench", "--smoke"])
 
 
 def check(
     engine_history: str,
     serve_history: str,
+    chaos_history: str = CHAOS_HISTORY,
     tolerance: float | None = None,
     as_json: bool = False,
 ) -> int:
-    """Gate both trajectories; print diagnostics; return the exit status."""
+    """Gate the trajectories; print diagnostics; return the exit status."""
     findings: list[Finding] = []
     n_records = 0
     for path, policies in (
         (engine_history, ENGINE_METRICS),
         (serve_history, SERVE_METRICS),
+        (chaos_history, CHAOS_METRICS),
     ):
         records = load_history(path)
         n_records += len(records)
@@ -90,7 +96,8 @@ def check(
     failed = [f for f in findings if f.failed]
     if n_records == 0:
         print("perfgate/FAIL: no trajectory records found "
-              f"({engine_history}, {serve_history}) — nothing to gate",
+              f"({engine_history}, {serve_history}, {chaos_history}) "
+              "— nothing to gate",
               file=sys.stderr)
         return 1
     if failed:
@@ -125,6 +132,8 @@ def main(argv: list[str] | None = None) -> int:
                     help="path of the engine trajectory JSON")
     ap.add_argument("--serve-history", default=SERVE_HISTORY,
                     help="path of the serve trajectory JSON")
+    ap.add_argument("--chaos-history", default=CHAOS_HISTORY,
+                    help="path of the chaos-soak trajectory JSON")
     ap.add_argument("--json", action="store_true",
                     help="emit findings as JSON instead of text")
     ap.add_argument("--tolerance", type=float, default=None,
@@ -142,7 +151,7 @@ def main(argv: list[str] | None = None) -> int:
     # the gate always runs last: probe/replay without a check would
     # silently accept whatever they produced
     return check(
-        args.engine_history, args.serve_history,
+        args.engine_history, args.serve_history, args.chaos_history,
         tolerance=args.tolerance, as_json=args.json,
     )
 

@@ -4,8 +4,9 @@ The paper's soundness guarantee (a gfp overapproximation of SPARQL answers)
 survives in this codebase only because of invariants that no general-purpose
 linter knows about: JAX trace safety inside jitted fixpoints, the pad-bit
 masking rule for bit-packed ``uint32`` words, lock discipline around the
-threaded serving stack, and the "every submitted request resolves to exactly
-one outcome" futures contract.  reprolint mechanizes those rules as small
+threaded serving stack, the "every submitted request resolves to exactly
+one outcome" futures contract, and the exception-hygiene rule that keeps
+the failure plane's accounting honest.  reprolint mechanizes those rules as small
 stdlib-``ast`` checkers and gates CI on them (DESIGN.md Sect. 11 has the full
 rule catalog with the bug that motivated each rule).
 
@@ -28,6 +29,13 @@ Rules
   once: one of ``set_result`` / ``set_exception`` / ``_resolve`` / ``_reject``
   / ``cancel``, or an explicit hand-off (passing it to a call, storing it in
   a container, or returning it).
+* **RL5 exception hygiene** — no bare ``except:`` (it catches
+  ``SystemExit`` / ``KeyboardInterrupt`` / ``CancelledError`` too); no
+  ``except Exception`` / ``except BaseException`` handler whose body is only
+  ``pass`` / ``continue`` / ``...`` (specific exception types stay allowed —
+  ``except asyncio.TimeoutError: pass`` is the waiting idiom, not a
+  swallow); no ``create_task(...)`` whose Task handle is dropped as a bare
+  expression statement (keep the handle + ``add_done_callback``, or await).
 
 CONTRIBUTING — annotation conventions
 -------------------------------------
@@ -61,6 +69,8 @@ Suppressions (use sparingly; every suppression needs a reason)
 ``# packed-ok: <reason>``      RL2 line-level escape hatch
 ``# lock-ok: <reason>``        RL3 line-level escape hatch
 ``# future-ok: <reason>``      RL4 line-level escape hatch
+``# rl5: swallow-ok — <reason>``  RL5 line-level escape hatch (on the
+                               swallowing line or the ``except`` above it)
 
 Baseline: ``tools/reprolint/baseline.json`` holds fingerprints of findings
 grandfathered during a migration.  Policy: the baseline is **empty at merge**

@@ -1,15 +1,17 @@
-"""Checker registry: the four repo-native rule families (RL1–RL4)."""
+"""Checker registry: the five repo-native rule families (RL1–RL5)."""
 
 from tools.reprolint.checkers.rl1_trace import TraceSafetyChecker
 from tools.reprolint.checkers.rl2_padbits import PadBitChecker
 from tools.reprolint.checkers.rl3_locks import LockDisciplineChecker
 from tools.reprolint.checkers.rl4_futures import ExactlyOnceFutureChecker
+from tools.reprolint.checkers.rl5_exceptions import ExceptionHygieneChecker
 
 ALL_CHECKERS = [
     TraceSafetyChecker,
     PadBitChecker,
     LockDisciplineChecker,
     ExactlyOnceFutureChecker,
+    ExceptionHygieneChecker,
 ]
 
 __all__ = [
@@ -18,4 +20,5 @@ __all__ = [
     "PadBitChecker",
     "LockDisciplineChecker",
     "ExactlyOnceFutureChecker",
+    "ExceptionHygieneChecker",
 ]

@@ -1,0 +1,114 @@
+"""RL5 — exception hygiene: no silent swallows, no dropped task handles.
+
+The failure plane of ISSUE 10 only works when errors *surface*: a crashed
+replica must feed the health state machine, a wedged solve must trip the
+watchdog, a poisoned request must resolve its future with an error.  Every
+silently-discarded exception is a hole in that accounting, and the three
+shapes this rule flags are exactly the holes that hide fault-injection
+regressions:
+
+* **bare ``except:``** — catches ``SystemExit`` / ``KeyboardInterrupt`` /
+  ``asyncio.CancelledError`` along with everything else; a cancelled
+  dispatcher drain or a watchdog abandonment can be eaten by one of these
+  and the server wedges instead of shutting down.  Flagged regardless of
+  the handler body: even a re-raising bare except should name what it
+  catches (``except BaseException:``).
+* **broad silent swallow** — an ``except Exception`` / ``except
+  BaseException`` handler (directly or inside a tuple) whose body does
+  nothing: only ``pass`` / ``continue`` / ``...``.  The error leaves no
+  record anywhere — no metric, no event, no log, no re-raise.  Handlers
+  naming *specific* exception types (``except asyncio.TimeoutError:
+  pass`` — the flush-timer wait idiom) are a legitimate pattern and do
+  not fire.
+* **dropped ``create_task`` result** — a ``create_task(...)`` call used
+  as a bare expression statement.  The event loop keeps only a weak
+  reference to tasks: the handle can be collected mid-flight, and its
+  exception is reported only at GC time ("Task exception was never
+  retrieved"), long after the failure mattered.  Keep the handle and
+  attach a done-callback or await it — the ``AsyncServer._batch_tasks``
+  pattern (strong set + ``add_done_callback`` that both retrieves the
+  exception and discards the reference).
+
+Escape hatch: ``# rl5: swallow-ok — <reason>`` on the offending line (or
+the line above) for sites where discarding really is the contract, e.g. a
+best-effort cleanup path whose failure has no one left to tell.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.reprolint.checkers.common import dotted
+from tools.reprolint.core import Checker, Context, Finding
+
+#: Exception leaves broad enough that silently eating them hides real bugs.
+BROAD_TYPES = {"Exception", "BaseException"}
+
+
+def _type_leaves(type_node: ast.AST | None) -> list[str]:
+    """Leaf names of the exception types a handler catches ([] for bare)."""
+    if type_node is None:
+        return []
+    elts = type_node.elts if isinstance(type_node, ast.Tuple) else [type_node]
+    return [dotted(e).rpartition(".")[2] for e in elts]
+
+
+def _is_silent(body: list[ast.stmt]) -> bool:
+    """True when the handler body discards the exception without a trace."""
+    for stmt in body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            continue  # docstring or `...`
+        return False
+    return True
+
+
+class ExceptionHygieneChecker(Checker):
+    """RL5: bare excepts, broad silent swallows, dropped create_task handles."""
+
+    rule_id = "RL5"
+    title = "exception hygiene"
+
+    def visit(self, ctx: Context) -> Iterable[Finding]:
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler):
+                findings.extend(self._check_handler(ctx, node))
+            elif isinstance(node, ast.Expr) and isinstance(node.value, ast.Call):
+                findings.extend(self._check_dropped_task(ctx, node))
+        return findings
+
+    def _check_handler(self, ctx: Context, node: ast.ExceptHandler):
+        if node.type is None:
+            yield self.finding(
+                ctx, node,
+                "bare `except:` catches SystemExit/KeyboardInterrupt/"
+                "CancelledError too — name the types "
+                "(`except Exception:` at the broadest)",
+            )
+            return
+        caught = _type_leaves(node.type)
+        broad = [t for t in caught if t in BROAD_TYPES]
+        if broad and _is_silent(node.body):
+            # Anchored on the body (the `pass`): the escape marker reads
+            # naturally either there or on the `except` line above.
+            yield self.finding(
+                ctx, node.body[0],
+                f"`except {broad[0]}` silently swallows the error (body is "
+                f"only pass/continue/...): record it, re-raise it, or "
+                f"narrow the type",
+            )
+
+    def _check_dropped_task(self, ctx: Context, node: ast.Expr):
+        call = node.value
+        if dotted(call.func).rpartition(".")[2] != "create_task":
+            return
+        yield self.finding(
+            ctx, node,
+            "`create_task(...)` result dropped: the loop holds only a weak "
+            "reference and the task's exception is never retrieved — keep "
+            "the handle and add_done_callback (see AsyncServer._batch_tasks) "
+            "or await it",
+        )

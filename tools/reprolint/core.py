@@ -20,7 +20,7 @@ import tokenize
 from pathlib import Path
 from typing import Iterable, Iterator
 
-RULES = ("RL1", "RL2", "RL3", "RL4")
+RULES = ("RL1", "RL2", "RL3", "RL4", "RL5")
 
 # Per-rule escape-hatch comment markers (line-level, reason required).
 ESCAPE_MARKERS = {
@@ -28,6 +28,7 @@ ESCAPE_MARKERS = {
     "RL2": "packed-ok:",
     "RL3": "lock-ok:",
     "RL4": "future-ok:",
+    "RL5": "rl5: swallow-ok",
 }
 
 DISABLE_MARKER = "reprolint: disable="

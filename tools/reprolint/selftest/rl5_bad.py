@@ -1,0 +1,44 @@
+"""Deliberately-dirty RL5 fixture: every exception-hygiene shape, no excuse.
+
+Expected findings (6):
+  bare except                                   -> 1
+  `except Exception: pass` swallow              -> 1
+  `except BaseException: ...` swallow           -> 1
+  broad-in-tuple `continue` swallow             -> 1
+  dropped `asyncio.create_task(...)` result     -> 2
+"""
+import asyncio
+
+
+def eats_everything(step):
+    try:
+        step()
+    except:  # noqa: E722 — the point of the fixture
+        print("oops")
+
+
+def swallows_broad(step):
+    try:
+        step()
+    except Exception:
+        pass
+
+
+def swallows_base_with_ellipsis(step):
+    try:
+        step()
+    except BaseException:
+        ...
+
+
+def swallows_broad_in_tuple(steps):
+    for step in steps:
+        try:
+            step()
+        except (ValueError, Exception):
+            continue
+
+
+async def drops_task_handles(coro_fn, loop):
+    asyncio.create_task(coro_fn())
+    loop.create_task(coro_fn())

@@ -1,0 +1,50 @@
+"""Corrected twin of ``rl5_bad.py``: every shape RL5 must stay silent on.
+
+Specific exception types may be silently dropped (waiting-with-timeout
+idiom), broad handlers must *do* something (record / re-raise), annotated
+swallows are the escape hatch, and task handles follow the
+``AsyncServer._batch_tasks`` pattern: strong reference + done-callback.
+"""
+import asyncio
+
+
+async def waits_out_the_timer(flush):
+    try:
+        await asyncio.wait_for(flush(), timeout=0.1)
+    except asyncio.TimeoutError:
+        pass  # flush-timer wait idiom: the timeout IS the signal
+    except ValueError:
+        pass  # specific type: silence is a documented contract here
+    return None
+
+
+def records_broad_failure(step, log):
+    try:
+        step()
+    except Exception as exc:
+        log.append(repr(exc))
+
+
+def reraises_after_cleanup(step, slot):
+    try:
+        step()
+    except BaseException:
+        slot.clear()
+        raise
+
+
+def best_effort_teardown(handles):
+    for h in handles:
+        try:
+            h.close()
+        except Exception:
+            pass  # rl5: swallow-ok — teardown path, no caller left to tell
+
+
+async def keeps_task_handles(coro_fn):
+    tasks = set()
+    t = asyncio.create_task(coro_fn())
+    tasks.add(t)
+    t.add_done_callback(tasks.discard)
+    await asyncio.create_task(coro_fn())
+    return tasks
